@@ -1,0 +1,27 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+import numpy as np
+
+
+def time_iterations(step_fn: Callable, state, n_iter: int, warmup: int = 3
+                    ) -> Tuple[float, object]:
+    """Returns (iterations/sec, final_state) for a jitted step."""
+    for _ in range(warmup):
+        state, out = step_fn(state)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(n_iter):
+        state, out = step_fn(state)
+    jax.block_until_ready(out)
+    return n_iter / (time.time() - t0), state
+
+
+def row(name: str, it_per_s: float, **derived) -> dict:
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    return {"name": name, "us_per_call": 1e6 / it_per_s if it_per_s else 0.0,
+            "derived": f"it_per_s={it_per_s:.1f}" + (";" + d if d else "")}

@@ -1,0 +1,144 @@
+"""Roofline analysis (assignment §ROOFLINE): reads the dry-run JSONs and
+derives the three terms per (arch x shape) on the single-pod mesh:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+HLO terms use the L1/L2-calibrated totals (XLA counts while-loop bodies
+once; see launch/dryrun._calibrate).  Hardware: TPU v5e — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models.config import SHAPES
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link (ICI)
+
+
+def analyse_record(rec: dict) -> dict:
+    cal = rec.get("calibration", {}).get("corrected")
+    if cal is None:
+        cost = rec.get("cost", {})
+        flops, byts = cost.get("flops", 0.0), cost.get("bytes_accessed", 0.0)
+        coll = rec.get("collectives", {}).get("total_bytes", 0)
+    else:
+        flops, byts = cal["flops"], cal["bytes_accessed"]
+        coll = cal["collective_bytes"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    # MODEL_FLOPS: 6*N*D for train, 2*N_active*D for single-token decode
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        model_flops = 6 * n_active * shape.seq_len * shape.global_batch
+    elif shape.kind == "prefill":
+        model_flops = 2 * n_active * shape.seq_len * shape.global_batch
+    else:
+        model_flops = 2 * n_active * shape.global_batch
+    hlo_global = flops * rec["chips"]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "status": rec.get("status"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "bottleneck": bottleneck,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": model_flops / hlo_global if hlo_global else 0.0,
+        "step_time_bound_s": max(terms.values()),
+        "roofline_fraction": (t_compute / max(terms.values())
+                              if max(terms.values()) > 0 else 0.0),
+    }
+
+
+def load_all(mesh: str = "single"):
+    out = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            f = RESULTS / f"dryrun_{mesh}_{arch}_{shape}.json"
+            if not f.exists():
+                continue
+            rec = json.loads(f.read_text())
+            if rec.get("status") == "ok":
+                out.append(analyse_record(rec))
+            else:
+                out.append({"arch": arch, "shape": shape,
+                            "status": rec.get("status"),
+                            "skip_reason": rec.get("skip_reason", "")})
+    return out
+
+
+def run(quick: bool = True):
+    rows = []
+    for a in load_all():
+        if a.get("status") != "ok":
+            rows.append({"name": f"roofline/{a['arch']}/{a['shape']}",
+                         "us_per_call": 0.0,
+                         "derived": f"status={a.get('status')}"})
+            continue
+        rows.append({
+            "name": f"roofline/{a['arch']}/{a['shape']}",
+            "us_per_call": a["step_time_bound_s"] * 1e6,
+            "derived": (f"bottleneck={a['bottleneck']};"
+                        f"compute_s={a['t_compute_s']:.3e};"
+                        f"memory_s={a['t_memory_s']:.3e};"
+                        f"collective_s={a['t_collective_s']:.3e};"
+                        f"useful_ratio={a['useful_ratio']:.3f};"
+                        f"roofline_frac={a['roofline_fraction']:.3f}")})
+    return rows
+
+
+def suggestion(a: dict) -> str:
+    """One sentence: what would move the dominant term down (assignment
+    §ROOFLINE requirement)."""
+    shape = a["shape"]
+    b = a["bottleneck"]
+    if b == "collective":
+        if "train" in shape or "prefill" in shape:
+            return ("add sequence-parallel activation constraints so "
+                    "boundary collectives move seq-sharded bf16 slices "
+                    "(measured 19x on qwen2.5-32b, §Perf)")
+        return ("keep weights TP-resident / batch the decode steps to "
+                "amortize per-step weight all-gathers")
+    if b == "memory":
+        if "decode" in shape or "long" in shape:
+            return ("quantize the KV cache to int8 (+scales) and fuse "
+                    "multi-token decode to amortize weight reads")
+        return ("reduce remat recompute traffic (dots-saveable policy) and "
+                "shard activations over model to cut per-device bytes")
+    return ("increase per-device arithmetic intensity: larger microbatch "
+            "or fused kernels (flash attention / rwkv chunk kernel)")
+
+
+def markdown_table(mesh: str = "single") -> str:
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "bottleneck | MODEL/HLO | roofline frac | to improve |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for a in load_all(mesh):
+        if a.get("status") != "ok":
+            lines.append(f"| {a['arch']} | {a['shape']} | — | — | — | "
+                         f"{a.get('status')} | — | — | "
+                         f"{a.get('skip_reason', '')[:60]} |")
+            continue
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.3e} | "
+            f"{a['t_memory_s']:.3e} | {a['t_collective_s']:.3e} | "
+            f"{a['bottleneck']} | {a['useful_ratio']:.3f} | "
+            f"{a['roofline_fraction']:.3f} | {suggestion(a)} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,56 @@
+"""Benchmark driver: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (assignment template).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only tag]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (hours); default quick mode")
+    ap.add_argument("--only", default=None,
+                    help="run a single suite: table1|fig2|table2|fig3|fig4|"
+                         "fig5|fig6|fig7|table8|roofline")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import quality, roofline, table1_throughput
+
+    suites = {
+        "table1": lambda: table1_throughput.run(quick),
+        "fig2": lambda: quality.fig2_hypergrid_tv(quick),
+        "table2": lambda: quality.table2_hypergrid_sizes(quick),
+        "fig3": lambda: quality.fig3_bitseq_correlation(quick),
+        "fig4": lambda: quality.fig4_tfbind_qm9_tv(quick),
+        "fig5": lambda: quality.fig5_amp_topk(quick),
+        "fig6": lambda: quality.fig6_phylo_correlation(quick),
+        "fig7": lambda: quality.fig7_dag_jsd(quick),
+        "table8": lambda: quality.table8_ising_ebgfn(quick),
+        "roofline": lambda: roofline.run(quick),
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, fn in suites.items():
+        try:
+            for r in fn():
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}",
+                      flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{tag},0.0,ERROR={type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} suites failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Bayesian-network structure learning with the MDB objective (paper §B.4).
+
+Trains a GFlowNet posterior sampler over DAGs on synthetic linear-Gaussian
+data (BGe score) and reports JSD against the exact enumerated posterior
+plus edge/path marginal correlations.
+
+  PYTHONPATH=src python examples/dag_structure_learning.py [--d 4]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro
+from repro.core.policies import make_mlp_policy
+from repro.core.rollout import forward_rollout
+from repro.core.trainer import GFNConfig, init_train_state, make_train_step
+from repro.metrics.distributions import jensen_shannon, pearson_correlation
+from repro.rewards.bayesnet import (BayesNetRewardModule, edge_marginals,
+                                    enumerate_dags, exact_posterior,
+                                    path_marginals)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=6000)
+    ap.add_argument("--score", default="bge", choices=["bge", "lingauss"])
+    args = ap.parse_args()
+    d = args.d
+
+    rm = BayesNetRewardModule(d=d, num_samples=100, score=args.score,
+                              seed=1)
+    env = repro.DAGEnvironment(reward_module=rm, d=d)
+    params = env.init(jax.random.PRNGKey(0))
+
+    dags = enumerate_dags(d)
+    post = exact_posterior(dags, np.asarray(params["table"]))
+    ids = {g.astype(np.int8).tobytes(): i for i, g in enumerate(dags)}
+    print(f"{len(dags)} DAGs on {d} nodes; true graph has "
+          f"{int(np.asarray(params['true_adj']).sum())} edges")
+
+    pol = make_mlp_policy(d * d, env.action_dim, env.backward_action_dim,
+                          hidden=(128, 128), learn_backward=True)
+    cfg = GFNConfig(objective="mdb", num_envs=128, lr=1e-4,
+                    stop_action=env.stop_action, exploration_eps=1.0,
+                    exploration_anneal_steps=args.iters // 2)
+    step, tx = make_train_step(env, params, pol, cfg)
+    step = jax.jit(step)
+    ts = init_train_state(jax.random.PRNGKey(2), pol, tx)
+
+    def jsd_now():
+        b = forward_rollout(jax.random.PRNGKey(9), env, params, pol.apply,
+                            ts.params, 4000)
+        adj = np.asarray(b.obs[-1]).reshape(-1, d, d).astype(np.int8)
+        counts = np.zeros(len(dags))
+        for a in adj:
+            counts[ids[a.tobytes()]] += 1
+        emp = counts / counts.sum()
+        return emp, float(jensen_shannon(jnp.asarray(emp),
+                                         jnp.asarray(post)))
+
+    for it in range(args.iters):
+        ts, (m, batch) = step(ts)
+        if it % 1000 == 0 or it == args.iters - 1:
+            emp, jsd = jsd_now()
+            print(f"iter {it:6d}  loss {float(m['loss']):.5f}  "
+                  f"JSD {jsd:.4f}")
+
+    emp, jsd = jsd_now()
+    ce = float(pearson_correlation(
+        jnp.asarray(edge_marginals(dags, emp).ravel()),
+        jnp.asarray(edge_marginals(dags, post).ravel())))
+    cp = float(pearson_correlation(
+        jnp.asarray(path_marginals(dags, emp).ravel()),
+        jnp.asarray(path_marginals(dags, post).ravel())))
+    print(f"final: JSD={jsd:.4f} edge_corr={ce:.3f} path_corr={cp:.3f}")
+    assert jsd < 0.05, "did not converge"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""End-to-end driver: GFlowNet-TB fine-tuning of a ~100M-parameter LM policy
+for a few hundred steps, with fault-tolerant checkpointing (assignment
+deliverable (b): the end-to-end example).
+
+This is the production training path (launch.train) run at laptop scale:
+the same code drives the 16x16 / 2x16x16 pod meshes in the dry-run.
+
+  PYTHONPATH=src python examples/lm_gfn_finetune.py            # ~25M, fast
+  PYTHONPATH=src python examples/lm_gfn_finetune.py --hundred-m # ~100M
+"""
+import argparse
+import dataclasses
+
+from repro.launch.train import train_loop
+from repro.models.config import ModelConfig
+
+
+def model_100m() -> ModelConfig:
+    """~100M-parameter GQA transformer (qwen-style)."""
+    return ModelConfig(
+        name="gfn-lm-100m", family="dense", num_layers=12, d_model=640,
+        num_heads=10, num_kv_heads=2, head_dim=64, d_ff=2176,
+        vocab_size=32000, qkv_bias=True, remat="none")
+
+
+def model_25m() -> ModelConfig:
+    return ModelConfig(
+        name="gfn-lm-25m", family="dense", num_layers=8, d_model=320,
+        num_heads=5, num_kv_heads=1, head_dim=64, d_ff=1088,
+        vocab_size=16000, qkv_bias=True, remat="none")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hundred-m", action="store_true",
+                    help="full ~100M model (slower on CPU)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=96)
+    ap.add_argument("--ckpt-dir", default="/tmp/gfn_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = model_100m() if args.hundred_m else model_25m()
+    print(f"model {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+
+    out = train_loop(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                     mesh_shape=(1, 1), ckpt_dir=args.ckpt_dir,
+                     ckpt_every=100, objective="tb", lr=1e-4,
+                     log_every=20)
+    losses = [h["loss"] for h in out["history"]]
+    print(f"loss: first={losses[0]:.1f} last={losses[-1]:.1f}")
+    assert losses[-1] < losses[0], "TB loss should decrease"
+    print("done; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

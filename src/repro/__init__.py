@@ -1,0 +1,34 @@
+"""repro: gfnx-at-scale — a fast, scalable GFlowNet framework in JAX.
+
+Faithful reproduction of "gfnx: Fast and Scalable Library for Generative
+Flow Networks in JAX" (Tiapkin et al., 2025), extended with a production
+distribution layer (FSDP x TP x pod-DP meshes, Pallas TPU kernels) for
+GFlowNet fine-tuning of large language-model policies.
+
+Public API mirrors the paper's package layout (Listing 1/2 usage works).
+"""
+
+from .envs.base import Environment
+from .envs.hypergrid import HypergridEnvironment
+from .envs.bitseq import BitSeqEnvironment
+from .envs.sequences import (AMPEnvironment, QM9Environment,
+                             TFBind8Environment)
+from .envs.dag import DAGEnvironment
+from .envs.ising import IsingEnvironment
+from .envs.phylo import PhyloEnvironment
+from .rewards.hypergrid import (EasyHypergridRewardModule,
+                                HypergridRewardModule)
+from .core.rollout import backward_rollout, forward_rollout
+from .core.trainer import (GFNConfig, train, train_compiled,
+                           train_vectorized)
+
+__version__ = "1.0.0"
+
+__all__ = [
+    "Environment", "HypergridEnvironment", "BitSeqEnvironment",
+    "AMPEnvironment", "QM9Environment", "TFBind8Environment",
+    "DAGEnvironment", "IsingEnvironment", "PhyloEnvironment",
+    "EasyHypergridRewardModule", "HypergridRewardModule",
+    "forward_rollout", "backward_rollout",
+    "GFNConfig", "train", "train_compiled", "train_vectorized",
+]

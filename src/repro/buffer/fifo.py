@@ -1,0 +1,48 @@
+"""Flashbax-style flat FIFO buffer, pure JAX (paper uses flashbax [66] to
+hold recent terminal samples for empirical-distribution metrics, and replay
+buffers for off-policy training)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BufferState(NamedTuple):
+    data: Any              # pytree, leading dim = capacity
+    insert_pos: jax.Array  # ()
+    size: jax.Array        # ()
+
+
+class FIFOBuffer:
+    """Fixed-capacity circular buffer over an arbitrary item pytree."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+
+    def init(self, item_prototype: Any) -> BufferState:
+        data = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((self.capacity,) + jnp.shape(x),
+                                jnp.asarray(x).dtype), item_prototype)
+        return BufferState(data=data, insert_pos=jnp.zeros((), jnp.int32),
+                           size=jnp.zeros((), jnp.int32))
+
+    def add_batch(self, state: BufferState, items: Any) -> BufferState:
+        """items: pytree with leading batch dim B (B <= capacity)."""
+        B = jax.tree_util.tree_leaves(items)[0].shape[0]
+        idx = (state.insert_pos + jnp.arange(B)) % self.capacity
+        data = jax.tree_util.tree_map(
+            lambda buf, x: buf.at[idx].set(x), state.data, items)
+        return BufferState(
+            data=data,
+            insert_pos=(state.insert_pos + B) % self.capacity,
+            size=jnp.minimum(state.size + B, self.capacity))
+
+    def sample(self, state: BufferState, key: jax.Array, batch: int) -> Any:
+        idx = jax.random.randint(key, (batch,), 0,
+                                 jnp.maximum(state.size, 1))
+        return jax.tree_util.tree_map(lambda buf: buf[idx], state.data)
+
+    def valid_mask(self, state: BufferState) -> jax.Array:
+        return jnp.arange(self.capacity) < state.size

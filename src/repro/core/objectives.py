@@ -1,0 +1,165 @@
+"""GFlowNet training objectives (paper Appendix A, Eqs. 3-7 + MDB).
+
+Every objective consumes a :class:`RolloutBatch` and *re-evaluates* the policy
+on the stored observations (teacher forcing), so the same code path serves
+on-policy training, replay-buffer training, and backward-sampled trajectories.
+
+  DB     Eq. (3)   (log F(s) P_F(s'|s) - log F(s') P_B(s|s'))^2
+  TB     Eq. (4)   (log Z prod P_F - log R(x) prod P_B)^2
+  SubTB  Eq. (5)   lambda^(k-j)-weighted all-subtrajectory balance
+  FLDB   Eq. (7)   forward-looking DB with energy shaping, E(s0)=0
+  MDB    Deleu'22  modified DB for all-states-terminal DAG environments
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .rollout import PolicyApply, RolloutBatch
+from .types import masked_logprobs
+
+
+class TrajEval(NamedTuple):
+    """Differentiable per-trajectory quantities under current params.
+
+    log_pf      (T, B)   log P_F(a_t | s_t)
+    log_pb      (T, B)   log P_B(s_t | s_{t+1})
+    log_flow    (T+1, B) flow head at s_t (zeros if policy lacks one)
+    log_pf_stop (T+1, B) log P_F(stop | s_t) (zeros if env lacks stop)
+    """
+    log_pf: jax.Array
+    log_pb: jax.Array
+    log_flow: jax.Array
+    log_pf_stop: jax.Array
+
+
+def evaluate_trajectory(policy_apply: PolicyApply, params,
+                        batch: RolloutBatch,
+                        stop_action: Optional[int] = None) -> TrajEval:
+    Tp1, B = batch.obs.shape[:2]
+    flat_obs = batch.obs.reshape((Tp1 * B,) + batch.obs.shape[2:])
+    out = policy_apply(params, flat_obs)
+
+    def unflat(x):
+        return x.reshape((Tp1, B) + x.shape[1:])
+
+    logits = unflat(out["logits"])
+    logp_f = masked_logprobs(logits, batch.fwd_mask)
+    log_pf = jnp.take_along_axis(
+        logp_f[:-1], batch.actions[..., None], axis=-1)[..., 0]
+
+    logits_b = out.get("logits_b")
+    if logits_b is None:
+        logits_b = jnp.zeros(batch.bwd_mask.shape, jnp.float32)
+    else:
+        logits_b = unflat(logits_b)
+    logp_b = masked_logprobs(logits_b, batch.bwd_mask)
+    log_pb = jnp.take_along_axis(
+        logp_b[1:], batch.bwd_actions[..., None], axis=-1)[..., 0]
+
+    log_flow = unflat(out["log_flow"]) if "log_flow" in out else \
+        jnp.zeros((Tp1, B), jnp.float32)
+    if stop_action is not None:
+        log_pf_stop = logp_f[..., stop_action]
+    else:
+        log_pf_stop = jnp.zeros((Tp1, B), jnp.float32)
+
+    v = batch.valid
+    return TrajEval(log_pf=jnp.where(v, log_pf, 0.0),
+                    log_pb=jnp.where(v, log_pb, 0.0),
+                    log_flow=log_flow, log_pf_stop=log_pf_stop)
+
+
+# ---------------------------------------------------------------------------
+# Objectives
+# ---------------------------------------------------------------------------
+
+def tb_loss(ev: TrajEval, batch: RolloutBatch, log_z: jax.Array) -> jax.Array:
+    """Trajectory Balance, Eq. (4)."""
+    s_pf = jnp.sum(ev.log_pf, axis=0)
+    s_pb = jnp.sum(ev.log_pb, axis=0)
+    delta = log_z + s_pf - batch.log_reward - s_pb
+    return jnp.mean(jnp.square(delta))
+
+
+def _flow_targets(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
+    """log F(s_t) for t=0..T with terminal states pinned to log R(x)."""
+    log_r = batch.log_reward[None, :]
+    return jnp.where(batch.done, log_r, ev.log_flow)
+
+
+def db_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
+    """Detailed Balance, Eq. (3); F(terminal) := R."""
+    flows = _flow_targets(ev, batch)
+    delta = flows[:-1] + ev.log_pf - flows[1:] - ev.log_pb
+    delta = jnp.where(batch.valid, delta, 0.0)
+    n = jnp.maximum(jnp.sum(batch.valid), 1)
+    return jnp.sum(jnp.square(delta)) / n
+
+
+def subtb_loss(ev: TrajEval, batch: RolloutBatch, lam: float = 0.9
+               ) -> jax.Array:
+    """Subtrajectory Balance, Eq. (5), weights lambda^(k-j), normalized.
+
+    Implemented with prefix sums: with c_t = sum_{u<t}(log_pf - log_pb) and
+    phi_t = log F(s_t) - c_t, the (j,k) residual is phi_j - phi_k.
+    """
+    T, B = ev.log_pf.shape
+    flows = _flow_targets(ev, batch)                       # (T+1, B)
+    diffs = ev.log_pf - ev.log_pb                          # (T, B)
+    c = jnp.concatenate(
+        [jnp.zeros((1, B)), jnp.cumsum(diffs, axis=0)], axis=0)
+    phi = flows - c                                        # (T+1, B)
+    # state t is on the realized trajectory iff t==0 or transition t-1 valid
+    on_traj = jnp.concatenate(
+        [jnp.ones((1, B), bool), batch.valid], axis=0)     # (T+1, B)
+    idx = jnp.arange(T + 1)
+    pair_valid = (idx[:, None] < idx[None, :])[..., None]  # j < k
+    pair_valid = jnp.logical_and(pair_valid, on_traj[:, None, :])
+    pair_valid = jnp.logical_and(pair_valid, on_traj[None, :, :])
+    w = lam ** (idx[None, :] - idx[:, None]).astype(jnp.float32)
+    w = jnp.where(pair_valid, w[..., None] if w.ndim == 2 else w, 0.0)
+    resid = phi[:, None, :] - phi[None, :, :]              # (T+1, T+1, B)
+    num = jnp.sum(w * jnp.square(resid), axis=(0, 1))
+    den = jnp.maximum(jnp.sum(w, axis=(0, 1)), 1e-9)
+    return jnp.mean(num / den)
+
+
+def fldb_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
+    """Forward-Looking DB, Eq. (7).
+
+    The environment supplies energies with E(s0)=0 and E(x)=-log R(x) at
+    terminals, so the terminal forward-looking flow target is
+    log F~(x) = log R(x) + E(x) = 0.
+    """
+    fl_flows = jnp.where(batch.done, 0.0, ev.log_flow)
+    dE = batch.energy[1:] - batch.energy[:-1]
+    delta = fl_flows[:-1] + ev.log_pf - fl_flows[1:] - ev.log_pb + dE
+    delta = jnp.where(batch.valid, delta, 0.0)
+    n = jnp.maximum(jnp.sum(batch.valid), 1)
+    return jnp.sum(jnp.square(delta)) / n
+
+
+def mdb_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
+    """Modified DB (Deleu et al. 2022) for envs where every state is terminal.
+
+    For a non-stop transition s -> s':
+      R(s) P_F(s'|s) P_F(stop|s') = R(s') P_B(s|s') P_F(stop|s)
+    """
+    lr = batch.log_r_state                      # (T+1, B)
+    delta = (lr[:-1] + ev.log_pf + ev.log_pf_stop[1:]
+             - lr[1:] - ev.log_pb - ev.log_pf_stop[:-1])
+    # transitions that are the stop action itself are excluded: a stop step
+    # moves s -> terminal-copy(s); identified by done[t+1].
+    real = jnp.logical_and(batch.valid, jnp.logical_not(batch.done[1:]))
+    delta = jnp.where(real, delta, 0.0)
+    n = jnp.maximum(jnp.sum(real), 1)
+    return jnp.sum(jnp.square(delta)) / n
+
+
+OBJECTIVES = {
+    "tb": tb_loss, "db": db_loss, "subtb": subtb_loss,
+    "fldb": fldb_loss, "mdb": mdb_loss,
+}

@@ -1,0 +1,141 @@
+"""Policy factories for GFlowNet environments.
+
+A policy is ``(init, apply)`` where ``apply(params, obs)`` returns a dict:
+  logits    (B, A)    forward action logits
+  logits_b  (B, Ab)   backward action logits (omitted -> uniform P_B)
+  log_flow  (B,)      state-flow head (DB / SubTB / FLDB)
+
+``params['log_z']`` is the TB normalizing-constant estimate; trainers give it
+its own learning rate (paper Tables 3-7).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.core import (dense_apply, dense_init, embedding_apply,
+                       embedding_init, mlp_apply, mlp_init)
+from ..nn.transformer import (encoder_apply, encoder_init,
+                              positional_embedding_init)
+
+
+class Policy(NamedTuple):
+    init: Callable
+    apply: Callable
+
+
+def make_mlp_policy(obs_dim: int, action_dim: int,
+                    backward_action_dim: Optional[int] = None,
+                    hidden: Sequence[int] = (256, 256),
+                    learn_backward: bool = False,
+                    flow_head: bool = True,
+                    init_log_z: float = 0.0) -> Policy:
+    """MLP policy (paper hypergrid / TFBind8 / QM9 setup: 2x256)."""
+
+    def init(key):
+        heads = action_dim + (backward_action_dim if learn_backward else 0) \
+            + (1 if flow_head else 0)
+        p = {"torso": mlp_init(key, obs_dim, list(hidden), heads),
+             "log_z": jnp.zeros((), jnp.float32) + init_log_z}
+        return p
+
+    def apply(params, obs):
+        out = mlp_apply(params["torso"], obs.astype(jnp.float32))
+        res = {"logits": out[..., :action_dim]}
+        off = action_dim
+        if learn_backward:
+            res["logits_b"] = out[..., off:off + backward_action_dim]
+            off += backward_action_dim
+        if flow_head:
+            res["log_flow"] = out[..., off]
+        return res
+
+    return Policy(init, apply)
+
+
+def make_transformer_policy(vocab_size: int, max_len: int, action_dim: int,
+                            backward_action_dim: Optional[int] = None,
+                            num_layers: int = 3, dim: int = 64,
+                            num_heads: int = 8,
+                            learn_backward: bool = False,
+                            flow_head: bool = True,
+                            init_log_z: float = 0.0) -> Policy:
+    """Transformer policy over integer token observations (paper bitseq/AMP:
+    3 layers, 8 heads, dim 64).  Mean-pools the encoding and emits all heads
+    from one readout (position-wise actions get their logits from per-token
+    readouts concatenated with the pooled summary).
+    """
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        heads = action_dim + (backward_action_dim if learn_backward else 0) \
+            + (1 if flow_head else 0)
+        return {
+            "embed": embedding_init(ks[0], vocab_size, dim),
+            "pos": positional_embedding_init(ks[1], max_len, dim),
+            "encoder": encoder_init(ks[2], num_layers=num_layers, dim=dim,
+                                    num_heads=num_heads),
+            "readout": dense_init(ks[3], dim, heads),
+            "log_z": jnp.zeros((), jnp.float32) + init_log_z,
+        }
+
+    def apply(params, tokens):
+        tokens = tokens.astype(jnp.int32)
+        x = embedding_apply(params["embed"], tokens)
+        x = x + params["pos"]["pos"][None, :tokens.shape[1]]
+        h = encoder_apply(params["encoder"], x, num_heads=num_heads)
+        pooled = jnp.mean(h, axis=1)
+        out = dense_apply(params["readout"], pooled)
+        res = {"logits": out[..., :action_dim]}
+        off = action_dim
+        if learn_backward:
+            res["logits_b"] = out[..., off:off + backward_action_dim]
+            off += backward_action_dim
+        if flow_head:
+            res["log_flow"] = out[..., off]
+        return res
+
+    return Policy(init, apply)
+
+
+def make_phylo_policy(env, num_layers: int = 6, dim: int = 32,
+                      num_heads: int = 8, embed_dim: int = 128,
+                      init_log_z: float = 0.0) -> Policy:
+    """Slot-permutation-equivariant transformer policy for the phylogenetic
+    environment (paper Table 6 architecture): transformer over node slots
+    with NO positional embedding; merge-pair logits are symmetric bilinear
+    scores of slot embeddings; backward logits are per-slot scalars.
+    """
+    K = env.num_slots
+    F = env.obs_feat_dim
+    pairs = env.pairs  # (P, 2)
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        return {
+            "inp": dense_init(ks[0], F, dim),
+            "encoder": encoder_init(ks[1], num_layers=num_layers, dim=dim,
+                                    num_heads=num_heads, ff_dim=embed_dim),
+            "pair_proj": dense_init(ks[2], dim, dim),
+            "bwd_head": dense_init(ks[3], dim, 1),
+            "flow_head": dense_init(ks[4], dim, 1),
+            "log_z": jnp.zeros((), jnp.float32) + init_log_z,
+        }
+
+    def apply(params, obs):
+        # obs: (B, K, F)
+        x = dense_apply(params["inp"], obs.astype(jnp.float32))
+        h = encoder_apply(params["encoder"], x, num_heads=num_heads)
+        e = dense_apply(params["pair_proj"], h)        # (B, K, dim)
+        scores = jnp.einsum('bid,bjd->bij', e, e) / jnp.sqrt(
+            jnp.float32(e.shape[-1]))
+        logits = scores[:, pairs[:, 0], pairs[:, 1]]   # (B, P)
+        logits_b = dense_apply(params["bwd_head"], h)[..., 0]  # (B, K)
+        log_flow = jnp.mean(dense_apply(params["flow_head"], h)[..., 0],
+                            axis=-1)
+        return {"logits": logits, "logits_b": logits_b,
+                "log_flow": log_flow}
+
+    return Policy(init, apply)

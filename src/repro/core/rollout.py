@@ -1,0 +1,174 @@
+"""Compiled trajectory rollouts (paper: ``gfnx.utils.forward_rollout``).
+
+Both rollouts are single ``lax.scan`` programs over a *vectorized* environment
+— the end-to-end-compilation property the paper's speedups come from.  The
+backward rollout is the forward rollout with initial states replaced by
+terminal ones and ``env.step`` replaced by ``env.backward_step`` (paper §2).
+
+Trajectories store observations + masks + actions so that objectives can
+re-evaluate the policy differentiably (teacher forcing) both on-policy and
+from a replay buffer.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..envs.base import Environment
+from .types import masked_logprobs, pytree_dataclass, sample_masked
+
+PolicyApply = Callable[[Any, jax.Array], Dict[str, jax.Array]]
+
+
+@pytree_dataclass
+class RolloutBatch:
+    """Time-major trajectory batch; T = env.max_steps.
+
+    obs         (T+1, B, ...)  observation of state t
+    fwd_mask    (T+1, B, A)    legal forward actions at state t
+    bwd_mask    (T+1, B, Ab)   legal backward actions at state t
+    actions     (T, B)         forward action applied at state t
+    bwd_actions (T, B)         structural reverse of ``actions[t]`` at t+1
+    valid       (T, B)         transition t is real (source not yet terminal)
+    done        (T+1, B)       state t is terminal
+    log_reward  (B,)           terminal log-reward
+    log_r_state (T+1, B)       log R(s_t) for all-states-terminal envs else 0
+    energy      (T+1, B)       forward-looking energy E(s_t) (FLDB) else 0
+    log_pf_beh  (T, B)         behavior-time log P_F (diagnostics/IS)
+    """
+    obs: jax.Array
+    fwd_mask: jax.Array
+    bwd_mask: jax.Array
+    actions: jax.Array
+    bwd_actions: jax.Array
+    valid: jax.Array
+    done: jax.Array
+    log_reward: jax.Array
+    log_r_state: jax.Array
+    energy: jax.Array
+    log_pf_beh: jax.Array
+
+    @property
+    def num_steps(self) -> int:
+        return self.actions.shape[0]
+
+
+def _state_scalars(env: Environment, state, params):
+    """(log_r_state, energy) with safe zeros when the env lacks them."""
+    if getattr(env, "all_states_terminal", False):
+        lrs = env.log_reward(state, params)
+    else:
+        lrs = jnp.zeros(state.steps.shape, jnp.float32)
+    if hasattr(env, "energy"):
+        en = env.energy(state, params)
+    else:
+        en = jnp.zeros(state.steps.shape, jnp.float32)
+    return lrs, en
+
+
+def forward_rollout(key: jax.Array, env: Environment, env_params,
+                    policy_apply: PolicyApply, policy_params,
+                    num_envs: int, *, exploration_eps: jax.Array | float = 0.0,
+                    num_steps: Optional[int] = None) -> RolloutBatch:
+    T = num_steps if num_steps is not None else env.max_steps
+    obs0, state0 = env.reset(num_envs, env_params)
+
+    def step_fn(carry, key_t):
+        state = carry
+        obs = env.observe(state, env_params)
+        fmask = env.forward_mask(state, env_params)
+        bmask = env.backward_mask(state, env_params)
+        was_done = env.is_terminal(state, env_params)
+        out = policy_apply(policy_params, obs)
+        # terminal no-op environments keep a legal dummy action (argmax mask)
+        safe_mask = jnp.where(was_done[:, None],
+                              jnp.ones_like(fmask), fmask)
+        actions, log_pf = sample_masked(key_t, out["logits"], safe_mask,
+                                        eps=exploration_eps)
+        _, nstate, log_r, done, _ = env.step(state, actions, env_params)
+        bwd_actions = env.get_backward_action(state, actions, nstate,
+                                              env_params)
+        lrs, en = _state_scalars(env, state, env_params)
+        ys = dict(obs=obs, fwd_mask=fmask, bwd_mask=bmask, actions=actions,
+                  bwd_actions=bwd_actions,
+                  valid=jnp.logical_not(was_done), done=was_done,
+                  log_r=log_r, log_r_state=lrs, energy=en,
+                  log_pf_beh=jnp.where(was_done, 0.0, log_pf))
+        return nstate, ys
+
+    keys = jax.random.split(key, T)
+    final_state, ys = jax.lax.scan(step_fn, state0, keys)
+
+    obs_f = env.observe(final_state, env_params)
+    fmask_f = env.forward_mask(final_state, env_params)
+    bmask_f = env.backward_mask(final_state, env_params)
+    done_f = env.is_terminal(final_state, env_params)
+    lrs_f, en_f = _state_scalars(env, final_state, env_params)
+
+    cat = lambda a, b: jnp.concatenate([a, b[None]], axis=0)
+    return RolloutBatch(
+        obs=cat(ys["obs"], obs_f),
+        fwd_mask=cat(ys["fwd_mask"], fmask_f),
+        bwd_mask=cat(ys["bwd_mask"], bmask_f),
+        actions=ys["actions"],
+        bwd_actions=ys["bwd_actions"],
+        valid=ys["valid"],
+        done=cat(ys["done"], done_f),
+        log_reward=jnp.sum(ys["log_r"], axis=0),
+        log_r_state=cat(ys["log_r_state"], lrs_f),
+        energy=cat(ys["energy"], en_f),
+        log_pf_beh=ys["log_pf_beh"],
+    )
+
+
+class BackwardRollout(NamedTuple):
+    log_pf: jax.Array   # (B,) total forward log-prob of the reverse traj
+    log_pb: jax.Array   # (B,) total backward log-prob
+    batch: Optional[RolloutBatch]
+
+
+def backward_rollout(key: jax.Array, env: Environment, env_params,
+                     policy_apply: PolicyApply, policy_params,
+                     terminal_state, *, collect: bool = False,
+                     num_steps: Optional[int] = None) -> BackwardRollout:
+    """Sample tau ~ P_B(.|x) from given terminal states; return log P_F(tau)
+    and log P_B(tau|x) — the Monte-Carlo estimator of the paper's
+    P_hat_theta(x) uses exactly these (paper §B.2).
+
+    Uses the learned backward head if the policy provides ``logits_b``,
+    otherwise the uniform backward policy.
+    """
+    T = num_steps if num_steps is not None else env.max_steps
+
+    def step_fn(carry, key_t):
+        state, acc_pf, acc_pb = carry
+        at_init = env.is_initial(state, env_params)
+        obs = env.observe(state, env_params)
+        bmask = env.backward_mask(state, env_params)
+        out = policy_apply(policy_params, obs)
+        logits_b = out.get("logits_b")
+        if logits_b is None:
+            logits_b = jnp.zeros_like(bmask, jnp.float32)
+        safe_bmask = jnp.where(at_init[:, None], jnp.ones_like(bmask), bmask)
+        bwd_a, log_pb = sample_masked(key_t, logits_b, safe_bmask)
+        _, prev_state, _, _, _ = env.backward_step(state, bwd_a, env_params)
+        fwd_a = env.get_forward_action(state, bwd_a, prev_state, env_params)
+        prev_obs = env.observe(prev_state, env_params)
+        prev_out = policy_apply(policy_params, prev_obs)
+        fmask_prev = env.forward_mask(prev_state, env_params)
+        logp_f_all = masked_logprobs(prev_out["logits"], fmask_prev)
+        log_pf = jnp.take_along_axis(logp_f_all, fwd_a[:, None], axis=-1)[:, 0]
+        live = jnp.logical_not(at_init)
+        acc_pf = acc_pf + jnp.where(live, log_pf, 0.0)
+        acc_pb = acc_pb + jnp.where(live, log_pb, 0.0)
+        ys = dict(obs=obs, bwd_a=bwd_a, fwd_a=fwd_a, live=live)
+        return (prev_state, acc_pf, acc_pb), ys
+
+    B = terminal_state.steps.shape[0]
+    zeros = jnp.zeros((B,), jnp.float32)
+    keys = jax.random.split(key, T)
+    (state0, log_pf, log_pb), ys = jax.lax.scan(
+        step_fn, (terminal_state, zeros, zeros), keys)
+    return BackwardRollout(log_pf=log_pf, log_pb=log_pb, batch=None)

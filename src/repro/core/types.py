@@ -1,0 +1,105 @@
+"""Shared pytree types for the GFlowNet core.
+
+The paper's base primitives (BaseEnvState / BaseEnvParams /
+BaseVecEnvironment / BaseRewardModule) map onto:
+
+- env states: per-environment frozen dataclasses registered as pytrees
+  (all leading dims = num_envs),
+- env params: frozen dataclasses holding static config + reward-module params,
+- environments / reward modules: stateless python objects whose methods are
+  pure functions of (state, action, params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pytree_dataclass(cls=None, *, meta_fields: Tuple[str, ...] = ()):
+    """Register a frozen dataclass as a JAX pytree.
+
+    ``meta_fields`` are static (hashable) fields excluded from tree leaves.
+    """
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        data_fields = tuple(f.name for f in dataclasses.fields(c)
+                            if f.name not in meta_fields)
+        jax.tree_util.register_dataclass(
+            c, data_fields=data_fields, meta_fields=tuple(meta_fields))
+        return c
+
+    return wrap if cls is None else wrap(cls)
+
+
+def replace(obj, **kw):
+    return dataclasses.replace(obj, **kw)
+
+
+@pytree_dataclass
+class Trajectory:
+    """Batch of rollout trajectories, time-major fields shaped (T, B, ...).
+
+    obs:        (T+1, B, obs_dim)   observations, obs[t] is pre-action t
+    actions:    (T, B)              forward action taken at step t
+    log_pf:     (T, B)              log P_F(a_t | s_t)
+    log_pb:     (T, B)              log P_B(s_t | s_{t+1})  (0 where invalid)
+    log_flow:   (T+1, B)            log F_theta(s_t) head output (0 if unused)
+    log_reward: (B,)                terminal log-reward
+    done:       (T+1, B)            state t is terminal (done[0] = False)
+    valid:      (T, B)              transition t is real (pre-terminal)
+    """
+    obs: jax.Array
+    actions: jax.Array
+    log_pf: jax.Array
+    log_pb: jax.Array
+    log_flow: jax.Array
+    log_reward: jax.Array
+    done: jax.Array
+    valid: jax.Array
+
+    @property
+    def num_steps(self) -> int:
+        return self.actions.shape[0]
+
+    @property
+    def batch_size(self) -> int:
+        return self.actions.shape[1]
+
+
+@pytree_dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    key: jax.Array
+
+
+def masked_logprobs(logits: jax.Array, mask: jax.Array) -> jax.Array:
+    """Log-softmax restricted to legal actions. mask True = legal."""
+    neg = jnp.asarray(jnp.finfo(logits.dtype).min, logits.dtype)
+    masked = jnp.where(mask, logits, neg)
+    return jax.nn.log_softmax(masked, axis=-1)
+
+
+def sample_masked(key: jax.Array, logits: jax.Array, mask: jax.Array,
+                  eps: float = 0.0) -> Tuple[jax.Array, jax.Array]:
+    """Sample actions from masked policy with epsilon-uniform exploration.
+
+    Returns (actions, log_prob_under_policy) — log-probs are of the *policy*
+    (not the behavior distribution), matching the paper's objectives which are
+    off-policy-correct for DB/TB/SubTB with any full-support behavior.
+    """
+    logp = masked_logprobs(logits, mask)
+    key_u, key_c, key_m = jax.random.split(key, 3)
+    sampled = jax.random.categorical(key_c, logp, axis=-1)
+    # epsilon-uniform over legal actions
+    unif_logits = jnp.where(mask, 0.0, -jnp.inf)
+    uniform = jax.random.categorical(key_u, unif_logits, axis=-1)
+    take_unif = jax.random.uniform(key_m, sampled.shape) < eps
+    actions = jnp.where(take_unif, uniform, sampled)
+    logp_a = jnp.take_along_axis(logp, actions[..., None], axis=-1)[..., 0]
+    return actions, logp_a

@@ -1,0 +1,182 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs.
+
+Parameters are sharded 2-D — FSDP over ``data`` on one dim and TP over
+``model`` on the other (ZeRO-3-equivalent storage; XLA inserts the per-layer
+all-gathers inside the scan, which the latency-hiding scheduler overlaps with
+compute).  Divisibility is checked per-dim; non-divisible dims fall back to
+replication, so every architecture (e.g. hymba's 25 heads, qwen2-moe's
+padded experts) shards cleanly.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# param names whose last-two dims are (reduced, output) = row-parallel:
+# output projection back to d_model -> shard in-dim by model, out by data
+_ROW_PARALLEL = re.compile(
+    r"(wo|we_down|cm_v|ssm_out)$")
+_EMBED = re.compile(r"embed$")
+_HEAD = re.compile(r"head$")
+
+
+def _axis_ok(mesh, axis: str, dim: int) -> bool:
+    return axis in mesh.axis_names and dim % mesh.shape[axis] == 0
+
+
+def _spec2d(mesh, d0: int, d1: int, a0: str, a1: str) -> Tuple:
+    return (a0 if _axis_ok(mesh, a0, d0) else None,
+            a1 if _axis_ok(mesh, a1, d1) else None)
+
+
+def param_spec(mesh, path: str, shape: Tuple[int, ...],
+               fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter tensor (path = '/'-joined keys).
+
+    ``fsdp=False`` drops the 'data'-axis storage sharding (TP-only params):
+    the right choice for *serving*, where per-step FSDP all-gathers would
+    dominate the decode collectives (see EXPERIMENTS.md §Perf, decode cell).
+    """
+    name = path.split("/")[-1]
+    nd = len(shape)
+    # scanned-layer stacks carry a leading L dim -> never sharded
+    lead: Tuple = ()
+    dims = shape
+    if path.startswith("layers/") or path.startswith("encoder/"):
+        lead = (None,)
+        dims = shape[1:]
+        nd -= 1
+    if nd == 0:
+        return P()
+    if nd == 1:
+        return P(*lead, None)
+
+    def maybe_data(axis):
+        return axis if fsdp else (None if axis == "data" else axis)
+
+    if _EMBED.search(name):
+        s = _spec2d(mesh, dims[0], dims[1], "model", "data")
+        return P(*lead, s[0], maybe_data(s[1]))
+    if _HEAD.search(name):
+        s = _spec2d(mesh, dims[0], dims[1], "data", "model")
+        return P(*lead, maybe_data(s[0]), s[1])
+    if nd == 3:  # expert stacks (E, d_in, d_out): EP over model, FSDP in
+        e, di, do = dims
+        return P(*lead,
+                 "model" if _axis_ok(mesh, "model", e) else None,
+                 maybe_data("data") if _axis_ok(mesh, "data", di) else None,
+                 None)
+    if _ROW_PARALLEL.search(name):
+        s = _spec2d(mesh, dims[0], dims[1], "model", "data")
+        return P(*lead, s[0], maybe_data(s[1]))
+    s = _spec2d(mesh, dims[0], dims[1], "data", "model")
+    return P(*lead, maybe_data(s[0]), s[1])
+
+
+def param_specs(mesh, params: Any, fsdp: bool = True) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        specs.append(param_spec(mesh, name, jnp.shape(leaf), fsdp=fsdp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(mesh) -> Tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _batch_ok(mesh, b: int) -> Optional[Tuple]:
+    axes = batch_spec(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return axes if b % total == 0 else None
+
+
+def input_sharding_specs(mesh, batch: Dict[str, Any], cfg) -> Dict[str, P]:
+    """PartitionSpecs for a train/prefill input batch of ShapeDtypeStructs."""
+    specs = {}
+    for k, v in batch.items():
+        shape = v.shape
+        if k == "position_ids":                    # (3, B, S)
+            ba = _batch_ok(mesh, shape[1])
+            specs[k] = P(None, ba, None)
+        elif k in ("tokens", "targets", "mask"):   # (B, S)
+            ba = _batch_ok(mesh, shape[0])
+            specs[k] = P(ba, None)
+        elif k in ("embeds", "frames"):            # (B, S, d)
+            ba = _batch_ok(mesh, shape[0])
+            m = "model" if cfg.d_model % mesh.shape.get("model", 1) == 0 \
+                and "model" in mesh.axis_names else None
+            specs[k] = P(ba, None, m)
+        elif k == "log_reward":                    # (B,)
+            specs[k] = P(_batch_ok(mesh, shape[0]))
+        else:
+            specs[k] = P()
+    return specs
+
+
+def cache_specs(mesh, cache: Any, cfg) -> Any:
+    """Decode-cache shardings: batch -> data, cache seq -> model (the KV
+    cache is the decode-memory hog: batch/data x seq/model keeps the
+    32k x 128 caches at ~2 GB/device for the 70-100B archs).  Falls back to
+    replication on non-divisible dims (e.g. batch 1 long-context)."""
+
+    def spec_for(path: str, shape) -> P:
+        name = path.split("/")[-1]
+        nd = len(shape)
+        if name in ("k", "v"):     # (L, B, S, KVH, hd)
+            L, B, S, KVH, hd = shape
+            return P(None,
+                     "data" if _axis_ok(mesh, "data", B) else None,
+                     "model" if _axis_ok(mesh, "model", S) else None,
+                     None, None)
+        if name == "pos":          # (L, B, S)
+            L, B, S = shape
+            return P(None,
+                     "data" if _axis_ok(mesh, "data", B) else None,
+                     "model" if _axis_ok(mesh, "model", S) else None)
+        if name in ("k_scale", "v_scale"):   # (L, B, S, KVH)
+            L, B, S, KVH = shape
+            return P(None,
+                     "data" if _axis_ok(mesh, "data", B) else None,
+                     "model" if _axis_ok(mesh, "model", S) else None,
+                     None)
+        if name == "wkv":          # (L, B, H, D, D)
+            L, B, H, D, _ = shape
+            return P(None,
+                     "data" if _axis_ok(mesh, "data", B) else None,
+                     "model" if _axis_ok(mesh, "model", H) else None,
+                     None, None)
+        if name == "ssm":          # (L, B, H, N, hd)
+            L, B, H, N, hd = shape
+            return P(None,
+                     "data" if _axis_ok(mesh, "data", B) else None,
+                     "model" if _axis_ok(mesh, "model", H) else None,
+                     None, None)
+        if name in ("shift", "cm_shift"):   # (L, B, d)
+            L, B, d = shape
+            return P(None,
+                     "data" if _axis_ok(mesh, "data", B) else None,
+                     "model" if _axis_ok(mesh, "model", d) else None)
+        if nd == 0:
+            return P()
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        specs.append(spec_for(name, jnp.shape(leaf)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,158 @@
+"""Base environment contract (paper §2: BaseVecEnvironment semantics).
+
+All environments are *stateless* python objects: every method is a pure
+function of ``(state, action, params)`` with a leading ``num_envs`` batch
+dimension on all state fields.  Key semantics, matching the paper:
+
+- ``step`` on an already-terminal sub-environment is a no-op (so fixed-length
+  ``lax.scan`` rollouts handle variable-length episodes).
+- environments emit **log_reward**: terminal transitions yield their
+  log-reward, non-terminal steps yield 0.  The reward evaluation is wrapped in
+  ``jax.lax.cond`` on "any element newly terminal" to avoid redundant work.
+- backward actions mirror forward structural choices; for environments with a
+  stop action the backward action space equals the forward one and the
+  reverse of "stop" is "un-stop" (terminal copy -> content state), which is
+  the only legal backward action at a terminal copy, so a uniform/learned
+  P_B assigns it probability 1.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import replace
+
+EnvState = Any
+EnvParams = Any
+
+
+class Environment(abc.ABC):
+    """Vectorized, JIT-able GFlowNet environment."""
+
+    #: number of forward actions (incl. stop where applicable)
+    action_dim: int
+    #: number of backward actions
+    backward_action_dim: int
+    #: maximum trajectory length (number of forward steps incl. stop)
+    max_steps: int
+
+    # -- setup -------------------------------------------------------------
+    @abc.abstractmethod
+    def init(self, key: jax.Array) -> EnvParams:
+        ...
+
+    @abc.abstractmethod
+    def reset(self, num_envs: int, params: EnvParams
+              ) -> Tuple[jax.Array, EnvState]:
+        ...
+
+    # -- dynamics ----------------------------------------------------------
+    @abc.abstractmethod
+    def _forward(self, state: EnvState, action: jax.Array,
+                 params: EnvParams) -> EnvState:
+        """Apply forward actions unconditionally (callers guard terminals)."""
+
+    @abc.abstractmethod
+    def _backward(self, state: EnvState, action: jax.Array,
+                  params: EnvParams) -> EnvState:
+        ...
+
+    @abc.abstractmethod
+    def is_terminal(self, state: EnvState, params: EnvParams) -> jax.Array:
+        ...
+
+    @abc.abstractmethod
+    def log_reward(self, state: EnvState, params: EnvParams) -> jax.Array:
+        """Terminal log-reward of the current object (defined at terminals)."""
+
+    @abc.abstractmethod
+    def observe(self, state: EnvState, params: EnvParams) -> jax.Array:
+        ...
+
+    @abc.abstractmethod
+    def forward_mask(self, state: EnvState, params: EnvParams) -> jax.Array:
+        ...
+
+    @abc.abstractmethod
+    def backward_mask(self, state: EnvState, params: EnvParams) -> jax.Array:
+        ...
+
+    @abc.abstractmethod
+    def get_backward_action(self, state: EnvState, action: jax.Array,
+                            next_state: EnvState, params: EnvParams
+                            ) -> jax.Array:
+        ...
+
+    def get_forward_action(self, state: EnvState, bwd_action: jax.Array,
+                           prev_state: EnvState, params: EnvParams
+                           ) -> jax.Array:
+        """Forward action that maps ``prev_state`` back to ``state`` given the
+        backward action just taken (inverse of ``get_backward_action``)."""
+        raise NotImplementedError
+
+    # -- public step API (paper Listing 1/2) --------------------------------
+    def step(self, state: EnvState, action: jax.Array, params: EnvParams):
+        was_done = self.is_terminal(state, params)
+        new_state = self._forward(state, action, params)
+        new_state = _select_state(was_done, state, new_state)
+        done = self.is_terminal(new_state, params)
+        newly_done = jnp.logical_and(done, jnp.logical_not(was_done))
+        log_r = _conditional_log_reward(self, new_state, newly_done, params)
+        obs = self.observe(new_state, params)
+        return obs, new_state, log_r, done, {}
+
+    def backward_step(self, state: EnvState, action: jax.Array,
+                      params: EnvParams):
+        at_init = self.is_initial(state, params)
+        new_state = self._backward(state, action, params)
+        new_state = _select_state(at_init, state, new_state)
+        obs = self.observe(new_state, params)
+        done = self.is_initial(new_state, params)
+        zeros = jnp.zeros(action.shape[:1], jnp.float32)
+        return obs, new_state, zeros, done, {}
+
+    def is_initial(self, state: EnvState, params: EnvParams) -> jax.Array:
+        """Default: a state with zero elapsed steps."""
+        return state.steps == 0
+
+    # convenience: uniform backward policy log-prob of a backward action
+    def uniform_backward_logprob(self, state: EnvState, action: jax.Array,
+                                 params: EnvParams) -> jax.Array:
+        mask = self.backward_mask(state, params)
+        n_legal = jnp.maximum(jnp.sum(mask, axis=-1), 1)
+        legal = jnp.take_along_axis(mask, action[:, None], axis=-1)[:, 0]
+        logp = -jnp.log(n_legal.astype(jnp.float32))
+        return jnp.where(legal, logp, -jnp.inf)
+
+
+def _select_state(pred: jax.Array, old: EnvState, new: EnvState) -> EnvState:
+    """Per-env select: keep ``old`` where pred, else ``new``."""
+
+    def sel(o, n):
+        p = pred.reshape(pred.shape + (1,) * (o.ndim - pred.ndim))
+        return jnp.where(p, o, n)
+
+    return jax.tree_util.tree_map(sel, old, new)
+
+
+def _conditional_log_reward(env: Environment, state: EnvState,
+                            newly_done: jax.Array, params: EnvParams
+                            ) -> jax.Array:
+    """Evaluate log-reward only if some element of the batch is terminal.
+
+    The paper wraps reward evaluation in ``jax.lax.cond`` so that rollouts
+    whose step has no terminal transition skip the (possibly expensive,
+    e.g. proxy-model) reward computation entirely.
+    """
+
+    def compute(_):
+        lr = env.log_reward(state, params)
+        return jnp.where(newly_done, lr, 0.0).astype(jnp.float32)
+
+    def skip(_):
+        return jnp.zeros(newly_done.shape, jnp.float32)
+
+    return jax.lax.cond(jnp.any(newly_done), compute, skip, operand=None)

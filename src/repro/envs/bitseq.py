@@ -1,0 +1,173 @@
+"""Bit-sequence environment (paper §3.2 / §B.2, after Malkin et al. 2022 and
+the non-autoregressive variant of Tiapkin et al. 2024).
+
+A fixed-length-n bit string is split into L = n/k blocks of k bits.  The
+initial state has all L positions empty; each forward action picks an empty
+position and writes one of m = 2^k words: action = position * m + word.
+Terminal after exactly L steps.  Backward actions are structural (paper §2):
+"remove the word at position p" — L backward actions.
+
+Reward: R(x) = exp(-beta * min_{x' in M} d(x, x') / n) with Hamming distance
+d and a fixed mode set M of |M|=60 strings built by concatenating n/8 random
+choices from H = {00000000, 11111111, 11110000, 00001111, 00111100}.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.types import pytree_dataclass
+from .base import Environment
+
+_H_PATTERNS = np.array([
+    [0, 0, 0, 0, 0, 0, 0, 0],
+    [1, 1, 1, 1, 1, 1, 1, 1],
+    [1, 1, 1, 1, 0, 0, 0, 0],
+    [0, 0, 0, 0, 1, 1, 1, 1],
+    [0, 0, 1, 1, 1, 1, 0, 0],
+], dtype=np.int32)
+
+
+def make_mode_set(seed: int, n: int, num_modes: int = 60) -> np.ndarray:
+    """Mode set M per the paper: concatenate n/8 patterns from H."""
+    rng = np.random.RandomState(seed)
+    chunks = n // 8
+    modes = np.zeros((num_modes, n), np.int32)
+    for i in range(num_modes):
+        picks = rng.randint(0, len(_H_PATTERNS), size=chunks)
+        modes[i] = _H_PATTERNS[picks].reshape(-1)
+    return modes
+
+
+def make_test_set(seed: int, modes: np.ndarray) -> np.ndarray:
+    """Test set: for every mode and every 0 <= i < n, flip i random bits."""
+    rng = np.random.RandomState(seed + 1)
+    num_modes, n = modes.shape
+    out = np.zeros((num_modes * n, n), np.int32)
+    row = 0
+    for mi in range(num_modes):
+        for i in range(n):
+            x = modes[mi].copy()
+            flip = rng.choice(n, size=i, replace=False)
+            x[flip] = 1 - x[flip]
+            out[row] = x
+            row += 1
+    return out
+
+
+@pytree_dataclass
+class BitSeqState:
+    tokens: jax.Array   # (B, L) int32 in [0, m]; m == empty
+    steps: jax.Array    # (B,)
+
+
+@pytree_dataclass(meta_fields=("n", "k"))
+class BitSeqParams:
+    n: int
+    k: int
+    modes: jax.Array          # (|M|, n) bits
+    mode_words: jax.Array     # (|M|, L) word ids (for fast Hamming)
+    beta: jax.Array
+
+
+class BitSeqEnvironment(Environment):
+    """Non-autoregressive bit-sequence generation."""
+
+    all_states_terminal = False
+
+    def __init__(self, n: int = 120, k: int = 8, beta: float = 3.0,
+                 num_modes: int = 60, seed: int = 0):
+        assert n % k == 0
+        assert n % 8 == 0, "mode set is built from 8-bit patterns (paper H)"
+        self.n, self.k = n, k
+        self.L = n // k
+        self.m = 2 ** k
+        self.empty = self.m
+        self.beta = beta
+        self.num_modes = num_modes
+        self.seed = seed
+        self.action_dim = self.L * self.m
+        self.backward_action_dim = self.L
+        self.max_steps = self.L
+        self.vocab_size = self.m + 1   # + empty token (for policies)
+
+    def init(self, key: jax.Array) -> BitSeqParams:
+        modes = make_mode_set(self.seed, self.n, self.num_modes)
+        # word id per k-bit block, MSB-first
+        pw = 2 ** np.arange(self.k - 1, -1, -1)
+        mode_words = (modes.reshape(-1, self.L, self.k) * pw).sum(-1)
+        return BitSeqParams(n=self.n, k=self.k,
+                            modes=jnp.asarray(modes),
+                            mode_words=jnp.asarray(mode_words, jnp.int32),
+                            beta=jnp.float32(self.beta))
+
+    def reset(self, num_envs: int, params) -> Tuple[jax.Array, BitSeqState]:
+        state = BitSeqState(
+            tokens=jnp.full((num_envs, self.L), self.empty, jnp.int32),
+            steps=jnp.zeros((num_envs,), jnp.int32))
+        return self.observe(state, params), state
+
+    # -- dynamics -----------------------------------------------------------
+    def _forward(self, state, action, params):
+        pos = action // self.m
+        word = action % self.m
+        tokens = state.tokens.at[jnp.arange(action.shape[0]), pos].set(word)
+        return BitSeqState(tokens=tokens, steps=state.steps + 1)
+
+    def _backward(self, state, action, params):
+        tokens = state.tokens.at[
+            jnp.arange(action.shape[0]), action].set(self.empty)
+        return BitSeqState(tokens=tokens,
+                           steps=jnp.maximum(state.steps - 1, 0))
+
+    def is_terminal(self, state, params):
+        return state.steps >= self.L
+
+    def log_reward(self, state, params):
+        """-beta * min Hamming(x, M) / n via per-word popcount table."""
+        # words differ -> hamming of the k-bit blocks
+        x = state.tokens[:, None, :]                     # (B, 1, L)
+        m = params.mode_words[None, :, :]                # (1, |M|, L)
+        xor = jnp.bitwise_xor(x, m)
+        ham = _popcount(xor, self.k).sum(-1)             # (B, |M|)
+        dmin = jnp.min(ham, axis=-1).astype(jnp.float32)
+        return -params.beta * dmin / self.n
+
+    def log_reward_of_words(self, words: jax.Array, params) -> jax.Array:
+        xor = jnp.bitwise_xor(words[:, None, :], params.mode_words[None])
+        ham = _popcount(xor, self.k).sum(-1)
+        return -params.beta * jnp.min(ham, -1).astype(jnp.float32) / self.n
+
+    def observe(self, state, params):
+        return state.tokens
+
+    # -- masks ----------------------------------------------------------------
+    def forward_mask(self, state, params):
+        empty = state.tokens == self.empty                   # (B, L)
+        return jnp.repeat(empty, self.m, axis=-1)            # (B, L*m)
+
+    def backward_mask(self, state, params):
+        return state.tokens != self.empty                    # (B, L)
+
+    def get_backward_action(self, state, action, next_state, params):
+        return action // self.m
+
+    def get_forward_action(self, state, bwd_action, prev_state, params):
+        b = jnp.arange(bwd_action.shape[0])
+        word = state.tokens[b, bwd_action]
+        return bwd_action * self.m + word
+
+    def terminal_state_from_words(self, words: jax.Array) -> BitSeqState:
+        B = words.shape[0]
+        return BitSeqState(tokens=words.astype(jnp.int32),
+                           steps=jnp.full((B,), self.L, jnp.int32))
+
+
+def _popcount(x: jax.Array, bits: int) -> jax.Array:
+    c = jnp.zeros_like(x)
+    for i in range(bits):
+        c = c + ((x >> i) & 1)
+    return c

@@ -1,0 +1,133 @@
+"""Hypergrid environment (paper §3.1 / §B.1, after Bengio et al. 2021).
+
+d-dimensional hypercube of side H.  Actions 0..d-1 increment one coordinate
+(staying in the grid); the LAST action (index d) is the stop/exit action that
+moves the state to its terminal copy (paper Listing 1).  Backward action i
+decrements coordinate i; backward action d is "un-stop".
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import pytree_dataclass, replace
+from ..rewards.hypergrid import HypergridRewardModule, EasyHypergridRewardModule
+from .base import Environment
+
+
+@pytree_dataclass
+class HypergridState:
+    pos: jax.Array        # (B, d) int32
+    terminal: jax.Array   # (B,) bool — terminal copy flag
+    steps: jax.Array      # (B,) int32
+
+
+@pytree_dataclass(meta_fields=("dim", "side"))
+class HypergridParams:
+    dim: int
+    side: int
+    reward_params: dict
+
+
+class HypergridEnvironment(Environment):
+
+    def __init__(self, reward_module: HypergridRewardModule | None = None,
+                 dim: int = 4, side: int = 20):
+        self.reward_module = reward_module or EasyHypergridRewardModule()
+        self.dim = dim
+        self.side = side
+        self.action_dim = dim + 1          # d increments + stop (last)
+        self.backward_action_dim = dim + 1  # d decrements + un-stop (last)
+        self.max_steps = dim * (side - 1) + 1
+        self.obs_dim = dim * side
+
+    # -- setup --------------------------------------------------------------
+    def init(self, key: jax.Array) -> HypergridParams:
+        return HypergridParams(
+            dim=self.dim, side=self.side,
+            reward_params=self.reward_module.init(key, self.dim, self.side))
+
+    def reset(self, num_envs: int, params: HypergridParams
+              ) -> Tuple[jax.Array, HypergridState]:
+        state = HypergridState(
+            pos=jnp.zeros((num_envs, self.dim), jnp.int32),
+            terminal=jnp.zeros((num_envs,), bool),
+            steps=jnp.zeros((num_envs,), jnp.int32))
+        return self.observe(state, params), state
+
+    # -- dynamics -----------------------------------------------------------
+    def _forward(self, state: HypergridState, action: jax.Array,
+                 params: HypergridParams) -> HypergridState:
+        is_stop = action == self.dim
+        inc = jax.nn.one_hot(action, self.dim, dtype=jnp.int32)
+        pos = jnp.clip(state.pos + jnp.where(is_stop[:, None], 0, inc),
+                       0, self.side - 1)
+        return HypergridState(pos=pos,
+                              terminal=jnp.logical_or(state.terminal, is_stop),
+                              steps=state.steps + 1)
+
+    def _backward(self, state: HypergridState, action: jax.Array,
+                  params: HypergridParams) -> HypergridState:
+        is_unstop = action == self.dim
+        dec = jax.nn.one_hot(action, self.dim, dtype=jnp.int32)
+        pos = jnp.clip(state.pos - jnp.where(is_unstop[:, None], 0, dec),
+                       0, self.side - 1)
+        terminal = jnp.where(is_unstop, False, state.terminal)
+        return HypergridState(pos=pos, terminal=terminal,
+                              steps=jnp.maximum(state.steps - 1, 0))
+
+    def is_terminal(self, state: HypergridState, params) -> jax.Array:
+        return state.terminal
+
+    def is_initial(self, state: HypergridState, params) -> jax.Array:
+        return jnp.logical_and(jnp.all(state.pos == 0, axis=-1),
+                               jnp.logical_not(state.terminal))
+
+    def log_reward(self, state: HypergridState, params) -> jax.Array:
+        return self.reward_module.log_reward(state.pos, params.reward_params,
+                                             self.side)
+
+    def observe(self, state: HypergridState, params) -> jax.Array:
+        oh = jax.nn.one_hot(state.pos, self.side)          # (B, d, H)
+        return oh.reshape(state.pos.shape[0], -1)
+
+    # -- masks ----------------------------------------------------------------
+    def forward_mask(self, state: HypergridState, params) -> jax.Array:
+        can_inc = state.pos < (self.side - 1)               # (B, d)
+        stop_ok = jnp.logical_not(state.terminal)[:, None]  # (B, 1)
+        return jnp.concatenate(
+            [jnp.logical_and(can_inc, stop_ok), stop_ok], axis=-1)
+
+    def backward_mask(self, state: HypergridState, params) -> jax.Array:
+        # from a terminal copy the only reverse is un-stop; from a content
+        # state, any coordinate > 0 can be decremented.
+        can_dec = jnp.logical_and(state.pos > 0,
+                                  jnp.logical_not(state.terminal)[:, None])
+        unstop = state.terminal[:, None]
+        return jnp.concatenate([can_dec, unstop], axis=-1)
+
+    def get_backward_action(self, state, action, next_state, params):
+        return action  # increment i <-> decrement i; stop <-> un-stop
+
+    def get_forward_action(self, state, bwd_action, prev_state, params):
+        return bwd_action  # symmetric action indexing
+
+    # -- exact target (for TV metric; paper computes it in closed form) -----
+    def true_distribution(self, params: HypergridParams) -> jax.Array:
+        """Exact R(x)/Z over all H^d terminal states (flattened C-order)."""
+        grids = jnp.stack(jnp.meshgrid(
+            *[jnp.arange(self.side)] * self.dim, indexing="ij"),
+            axis=-1).reshape(-1, self.dim)
+        lr = self.reward_module.log_reward(grids, params.reward_params,
+                                           self.side)
+        return jax.nn.softmax(lr)
+
+    def flatten_index(self, pos: jax.Array) -> jax.Array:
+        """C-order flat index of grid coordinates, matching
+        ``true_distribution`` ordering."""
+        idx = jnp.zeros(pos.shape[:-1], jnp.int32)
+        for i in range(self.dim):
+            idx = idx * self.side + pos[..., i]
+        return idx

@@ -1,0 +1,243 @@
+"""Phylogenetic-tree generation environment (paper §3.6 / §B.3, PhyloGFN).
+
+Start from a forest of n singleton species; each step merges two root trees
+under a new common ancestor; after n-1 merges a rooted binary tree remains.
+Only the topology is modeled (no branch lengths).
+
+Parsimony is maintained *incrementally* with Fitch's algorithm over 4-bit
+character-state masks: merging trees with root Fitch sets a, b gives
+``a & b`` when non-empty else ``a | b`` (+1 mutation at each site where the
+intersection is empty).  The accumulated mutation count M(s) gives the
+terminal reward R(x) = exp((C - M(x)) / alpha) (paper's rescaled Gibbs
+reward) and the FLDB energy shaping
+E(s) = (M(s) - C * merges/(n-1)) / alpha, which satisfies E(s0) = 0 and
+E(x) = -log R(x) at terminals.
+
+Slots: 2n-1 node slots (leaves 0..n-1, internal nodes fill the first empty
+internal slot).  Forward action = ordered pair index over slot pairs (i<j);
+backward action = the internal-root slot to split (structural choice, paper
+§2's "structural choices alone" abstraction).  Policies must be
+slot-permutation-equivariant (see core/policies.make_phylo_policy).
+
+Datasets: DS1-DS8 use the (species x sites) dimensions of the PhyloGFN
+benchmarks with synthetic alignments evolved along a random tree
+(offline substitute, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.types import pytree_dataclass
+from .base import Environment
+
+# (species, sites) of the 8 PhyloGFN benchmark alignments
+DS_DIMS = {
+    1: (27, 1949), 2: (29, 2520), 3: (36, 1812), 4: (41, 1137),
+    5: (50, 378), 6: (50, 1133), 7: (59, 1824), 8: (64, 1008),
+}
+# paper Table 6 reward constants C per dataset
+DS_REWARD_C = {1: 5800., 2: 8000., 3: 8800., 4: 3500., 5: 2300., 6: 2300.,
+               7: 12500., 8: 2800.}
+
+
+def synth_alignment(seed: int, n_species: int, n_sites: int,
+                    mut_prob: float = 0.15) -> np.ndarray:
+    """Synthetic DNA alignment evolved along a random binary tree."""
+    rng = np.random.RandomState(seed)
+    seqs = {0: rng.randint(0, 4, size=n_sites)}
+    nxt = 1
+    leaves = [0]
+    while len(leaves) < n_species:
+        parent = leaves.pop(rng.randint(len(leaves)))
+        for _ in range(2):
+            child = seqs[parent].copy()
+            mut = rng.rand(n_sites) < mut_prob
+            child[mut] = rng.randint(0, 4, size=int(mut.sum()))
+            seqs[nxt] = child
+            leaves.append(nxt)
+            nxt += 1
+    out = np.stack([seqs[i] for i in leaves[:n_species]])
+    return out.astype(np.int32)
+
+
+def make_pair_table(num_slots: int) -> Tuple[np.ndarray, np.ndarray]:
+    """pairs: (P, 2) slot pairs i<j; pair_index: (slots, slots) -> action."""
+    pairs = [(i, j) for i in range(num_slots) for j in range(i + 1, num_slots)]
+    pair_index = np.full((num_slots, num_slots), -1, np.int32)
+    for a, (i, j) in enumerate(pairs):
+        pair_index[i, j] = pair_index[j, i] = a
+    return np.asarray(pairs, np.int32), pair_index
+
+
+@pytree_dataclass
+class PhyloState:
+    node_fitch: jax.Array     # (B, 2n-1, S) uint8 bitmask in 1..15 (0=empty)
+    node_children: jax.Array  # (B, 2n-1, 2) int32, -1 for leaves/empty
+    node_mut: jax.Array       # (B, 2n-1) int32 mutations introduced at node
+    root_mask: jax.Array      # (B, 2n-1) bool
+    score: jax.Array          # (B,) accumulated parsimony M(s)
+    merges: jax.Array         # (B,)
+    steps: jax.Array          # (B,)
+
+
+class PhyloEnvironment(Environment):
+
+    def __init__(self, n_species: int, n_sites: int, alpha: float = 4.0,
+                 reward_c: float = 0.0, seed: int = 0):
+        self.n = n_species
+        self.sites = n_sites
+        self.alpha = alpha
+        self.reward_c = reward_c
+        self.seed = seed
+        self.num_slots = 2 * n_species - 1
+        pairs, pair_index = make_pair_table(self.num_slots)
+        self.pairs = jnp.asarray(pairs)
+        self.pair_index = jnp.asarray(pair_index)
+        self.action_dim = pairs.shape[0]
+        self.backward_action_dim = self.num_slots
+        self.max_steps = n_species - 1
+        self.obs_feat_dim = 19
+
+    @classmethod
+    def from_dataset(cls, ds: int, alpha: float = 4.0, seed: int = 0,
+                     n_species: int | None = None, n_sites: int | None = None):
+        ns, st = DS_DIMS[ds]
+        return cls(n_species or ns, n_sites or st, alpha=alpha,
+                   reward_c=DS_REWARD_C[ds], seed=seed + 100 * ds)
+
+    def init(self, key: jax.Array) -> dict:
+        aln = synth_alignment(self.seed, self.n, self.sites)
+        leaf_fitch = (1 << aln).astype(np.uint8)     # one-hot bitmask
+        return {"leaf_fitch": jnp.asarray(leaf_fitch),
+                "alpha": jnp.float32(self.alpha),
+                "C": jnp.float32(self.reward_c)}
+
+    def reset(self, num_envs: int, params) -> Tuple[jax.Array, PhyloState]:
+        B, K, S = num_envs, self.num_slots, self.sites
+        nf = jnp.zeros((B, K, S), jnp.uint8)
+        nf = nf.at[:, :self.n].set(params["leaf_fitch"][None])
+        root = jnp.zeros((B, K), bool).at[:, :self.n].set(True)
+        state = PhyloState(
+            node_fitch=nf,
+            node_children=jnp.full((B, K, 2), -1, jnp.int32),
+            node_mut=jnp.zeros((B, K), jnp.int32),
+            root_mask=root,
+            score=jnp.zeros((B,), jnp.float32),
+            merges=jnp.zeros((B,), jnp.int32),
+            steps=jnp.zeros((B,), jnp.int32))
+        return self.observe(state, params), state
+
+    def _first_empty_internal(self, state: PhyloState) -> jax.Array:
+        """(B,) first internal slot with no content (children[...,0] < 0 and
+        not a leaf and not active root)."""
+        K = self.num_slots
+        internal = jnp.arange(K) >= self.n
+        empty = jnp.logical_and(state.node_children[..., 0] < 0,
+                                jnp.logical_not(state.root_mask))
+        empty = jnp.logical_and(empty, internal[None])
+        return jnp.argmax(empty, axis=-1).astype(jnp.int32)
+
+    # -- dynamics -----------------------------------------------------------
+    def _forward(self, state: PhyloState, action, params) -> PhyloState:
+        B = action.shape[0]
+        b = jnp.arange(B)
+        ij = self.pairs[action]                     # (B, 2)
+        i, j = ij[:, 0], ij[:, 1]
+        new = self._first_empty_internal(state)
+        fi = state.node_fitch[b, i]                 # (B, S)
+        fj = state.node_fitch[b, j]
+        inter = jnp.bitwise_and(fi, fj)
+        union = jnp.bitwise_or(fi, fj)
+        has = inter > 0
+        newf = jnp.where(has, inter, union)
+        mut = jnp.sum(jnp.logical_not(has), axis=-1).astype(jnp.int32)
+
+        nf = state.node_fitch.at[b, new].set(newf)
+        nc = state.node_children.at[b, new, 0].set(i)
+        nc = nc.at[b, new, 1].set(j)
+        nm = state.node_mut.at[b, new].set(mut)
+        rm = state.root_mask.at[b, i].set(False)
+        rm = rm.at[b, j].set(False)
+        rm = rm.at[b, new].set(True)
+        return PhyloState(node_fitch=nf, node_children=nc, node_mut=nm,
+                          root_mask=rm,
+                          score=state.score + mut.astype(jnp.float32),
+                          merges=state.merges + 1, steps=state.steps + 1)
+
+    def _backward(self, state: PhyloState, action, params) -> PhyloState:
+        B = action.shape[0]
+        b = jnp.arange(B)
+        k = action
+        ch = state.node_children[b, k]              # (B, 2)
+        i, j = ch[:, 0], ch[:, 1]
+        mut = state.node_mut[b, k]
+        nf = state.node_fitch.at[b, k].set(0)
+        nc = state.node_children.at[b, k].set(-1)
+        nm = state.node_mut.at[b, k].set(0)
+        rm = state.root_mask.at[b, k].set(False)
+        # children slots are guaranteed valid (mask enforces internal roots)
+        rm = rm.at[b, jnp.maximum(i, 0)].set(True)
+        rm = rm.at[b, jnp.maximum(j, 0)].set(True)
+        return PhyloState(node_fitch=nf, node_children=nc, node_mut=nm,
+                          root_mask=rm,
+                          score=state.score - mut.astype(jnp.float32),
+                          merges=jnp.maximum(state.merges - 1, 0),
+                          steps=jnp.maximum(state.steps - 1, 0))
+
+    def is_terminal(self, state, params):
+        return state.merges >= self.n - 1
+
+    def is_initial(self, state, params):
+        return state.merges == 0
+
+    def log_reward(self, state, params):
+        return (params["C"] - state.score) / params["alpha"]
+
+    def energy(self, state, params):
+        """FLDB shaping: E(s0)=0, E(x) = -log R(x)."""
+        frac = state.merges.astype(jnp.float32) / (self.n - 1)
+        return (state.score - params["C"] * frac) / params["alpha"]
+
+    def observe(self, state: PhyloState, params):
+        """Slot-permutation-equivariant features, (B, 2n-1, 19):
+        histogram over the 15 nonzero Fitch bitmask values (normalized),
+        active-root flag, leaf flag, merges-normalized, node-mut-normalized.
+        """
+        B, K, S = state.node_fitch.shape
+        oh = jax.nn.one_hot(state.node_fitch, 16, dtype=jnp.float32)
+        hist = jnp.mean(oh, axis=2)[..., 1:]          # (B, K, 15)
+        is_leaf = (jnp.arange(K) < self.n).astype(jnp.float32)
+        feats = jnp.concatenate([
+            hist,
+            state.root_mask[..., None].astype(jnp.float32),
+            jnp.broadcast_to(is_leaf[None, :, None], (B, K, 1)),
+            jnp.broadcast_to(
+                (state.merges.astype(jnp.float32) / (self.n - 1))[:, None,
+                                                                  None],
+                (B, K, 1)),
+            (state.node_mut.astype(jnp.float32) / self.sites)[..., None],
+        ], axis=-1)
+        return feats
+
+    # -- masks ----------------------------------------------------------------
+    def forward_mask(self, state, params):
+        r = state.root_mask
+        both = jnp.logical_and(r[:, self.pairs[:, 0]], r[:, self.pairs[:, 1]])
+        return both                                  # (B, P)
+
+    def backward_mask(self, state, params):
+        internal = jnp.arange(self.num_slots) >= self.n
+        return jnp.logical_and(state.root_mask, internal[None])
+
+    def get_backward_action(self, state, action, next_state, params):
+        # the reverse of "merge (i,j)" is "split the node just created"
+        return self._first_empty_internal(state)
+
+    def get_forward_action(self, state, bwd_action, prev_state, params):
+        b = jnp.arange(bwd_action.shape[0])
+        ch = state.node_children[b, bwd_action]
+        return self.pair_index[ch[:, 0], ch[:, 1]]

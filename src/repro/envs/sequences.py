@@ -1,0 +1,375 @@
+"""Sequence-generation environments (paper §B.2): TFBind8, QM9, AMP.
+
+Three of the paper's four sequence-generation schemes are instantiated here:
+  - TFBind8: autoregressive, fixed length 8, vocab 4 (nucleotides)
+  - QM9:     prepend/append, 5 blocks from an 11-word vocabulary (2 stems)
+  - AMP:     autoregressive, variable length <= 60, vocab 20 + stop
+(the fourth, non-autoregressive, is the bit-sequence env in bitseq.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import pytree_dataclass
+from .base import Environment
+
+
+# ===========================================================================
+# Autoregressive, fixed length (TFBind8)
+# ===========================================================================
+
+@pytree_dataclass
+class SeqState:
+    tokens: jax.Array   # (B, max_len) int32; pad = vocab
+    length: jax.Array   # (B,)
+    steps: jax.Array    # (B,)
+    stopped: jax.Array  # (B,) bool (variable-length envs only)
+
+
+class AutoregressiveEnvironment(Environment):
+    """Fixed-length autoregressive generation: action = next symbol.
+
+    Backward is degenerate (remove last symbol): 1 structural action.
+    """
+
+    def __init__(self, reward_module, length: int, vocab: int):
+        self.reward_module = reward_module
+        self.length = length
+        self.vocab = vocab
+        self.pad = vocab
+        self.action_dim = vocab
+        self.backward_action_dim = 1
+        self.max_steps = length
+        self.vocab_size = vocab + 1
+
+    def init(self, key):
+        return self.reward_module.init(key)
+
+    def reset(self, num_envs, params):
+        state = SeqState(
+            tokens=jnp.full((num_envs, self.length), self.pad, jnp.int32),
+            length=jnp.zeros((num_envs,), jnp.int32),
+            steps=jnp.zeros((num_envs,), jnp.int32),
+            stopped=jnp.zeros((num_envs,), bool))
+        return self.observe(state, params), state
+
+    def _forward(self, state, action, params):
+        b = jnp.arange(action.shape[0])
+        tokens = state.tokens.at[b, state.length].set(action)
+        return SeqState(tokens=tokens, length=state.length + 1,
+                        steps=state.steps + 1, stopped=state.stopped)
+
+    def _backward(self, state, action, params):
+        b = jnp.arange(action.shape[0])
+        tokens = state.tokens.at[b, state.length - 1].set(self.pad)
+        return SeqState(tokens=tokens,
+                        length=jnp.maximum(state.length - 1, 0),
+                        steps=jnp.maximum(state.steps - 1, 0),
+                        stopped=state.stopped)
+
+    def is_terminal(self, state, params):
+        return state.length >= self.length
+
+    def log_reward(self, state, params):
+        return self.reward_module.log_reward(state.tokens, state.length,
+                                             params)
+
+    def observe(self, state, params):
+        return state.tokens
+
+    def forward_mask(self, state, params):
+        ok = state.length < self.length
+        return jnp.broadcast_to(ok[:, None],
+                                (state.length.shape[0], self.vocab))
+
+    def backward_mask(self, state, params):
+        return (state.length > 0)[:, None]
+
+    def get_backward_action(self, state, action, next_state, params):
+        return jnp.zeros_like(action)
+
+    def get_forward_action(self, state, bwd_action, prev_state, params):
+        b = jnp.arange(bwd_action.shape[0])
+        return state.tokens[b, prev_state.length]
+
+    def terminal_state_from_tokens(self, tokens: jax.Array) -> SeqState:
+        B = tokens.shape[0]
+        return SeqState(tokens=tokens.astype(jnp.int32),
+                        length=jnp.full((B,), self.length, jnp.int32),
+                        steps=jnp.full((B,), self.length, jnp.int32),
+                        stopped=jnp.zeros((B,), bool))
+
+
+class TFBind8Environment(AutoregressiveEnvironment):
+    """DNA-sequence design, length 8, vocab {A, C, G, T} (paper §3.3)."""
+
+    def __init__(self, reward_module=None):
+        if reward_module is None:
+            from ..rewards.tfbind8 import TFBind8RewardModule
+            reward_module = TFBind8RewardModule()
+        super().__init__(reward_module, length=8, vocab=4)
+
+    def flatten_index(self, tokens: jax.Array) -> jax.Array:
+        idx = jnp.zeros(tokens.shape[:-1], jnp.int32)
+        for i in range(self.length):
+            idx = idx * self.vocab + tokens[..., i]
+        return idx
+
+
+# ===========================================================================
+# Variable length autoregressive (AMP)
+# ===========================================================================
+
+class VariableLengthSeqEnvironment(Environment):
+    """Autoregressive generation with a stop action (last action index).
+
+    Backward actions mirror forward: "remove last symbol" (structural,
+    1 action) + "un-stop" (last index).
+    """
+
+    def __init__(self, reward_module, max_len: int, vocab: int,
+                 min_len: int = 1):
+        self.reward_module = reward_module
+        self.max_len = max_len
+        self.min_len = min_len
+        self.vocab = vocab
+        self.pad = vocab
+        self.action_dim = vocab + 1             # symbols + stop (last)
+        self.stop_action = vocab
+        self.backward_action_dim = 2            # [remove-last, un-stop]
+        self.max_steps = max_len + 1
+        self.vocab_size = vocab + 1
+
+    def init(self, key):
+        return self.reward_module.init(key)
+
+    def reset(self, num_envs, params):
+        state = SeqState(
+            tokens=jnp.full((num_envs, self.max_len), self.pad, jnp.int32),
+            length=jnp.zeros((num_envs,), jnp.int32),
+            steps=jnp.zeros((num_envs,), jnp.int32),
+            stopped=jnp.zeros((num_envs,), bool))
+        return self.observe(state, params), state
+
+    def _forward(self, state, action, params):
+        is_stop = action == self.stop_action
+        b = jnp.arange(action.shape[0])
+        write = jnp.where(is_stop, self.pad,
+                          jnp.minimum(action, self.vocab - 1))
+        pos = jnp.minimum(state.length, self.max_len - 1)
+        new_tokens = state.tokens.at[b, pos].set(write)
+        tokens = jnp.where(is_stop[:, None], state.tokens, new_tokens)
+        length = jnp.where(is_stop, state.length, state.length + 1)
+        return SeqState(tokens=tokens, length=length, steps=state.steps + 1,
+                        stopped=jnp.logical_or(state.stopped, is_stop))
+
+    def _backward(self, state, action, params):
+        is_unstop = action == 1
+        b = jnp.arange(action.shape[0])
+        pos = jnp.maximum(state.length - 1, 0)
+        removed = state.tokens.at[b, pos].set(self.pad)
+        tokens = jnp.where(is_unstop[:, None], state.tokens, removed)
+        length = jnp.where(is_unstop, state.length,
+                           jnp.maximum(state.length - 1, 0))
+        stopped = jnp.where(is_unstop, False, state.stopped)
+        return SeqState(tokens=tokens, length=length,
+                        steps=jnp.maximum(state.steps - 1, 0),
+                        stopped=stopped)
+
+    def is_terminal(self, state, params):
+        # forced stop at max_len is modeled by masking symbols, so terminal
+        # states are exactly the stopped ones.
+        return state.stopped
+
+    def is_initial(self, state, params):
+        return jnp.logical_and(state.length == 0,
+                               jnp.logical_not(state.stopped))
+
+    def log_reward(self, state, params):
+        return self.reward_module.log_reward(state.tokens, state.length,
+                                             params)
+
+    def observe(self, state, params):
+        return state.tokens
+
+    def forward_mask(self, state, params):
+        live = jnp.logical_not(state.stopped)
+        sym_ok = jnp.logical_and(live, state.length < self.max_len)
+        stop_ok = jnp.logical_and(live, state.length >= self.min_len)
+        B = state.length.shape[0]
+        return jnp.concatenate(
+            [jnp.broadcast_to(sym_ok[:, None], (B, self.vocab)),
+             stop_ok[:, None]], axis=-1)
+
+    def backward_mask(self, state, params):
+        remove_ok = jnp.logical_and(jnp.logical_not(state.stopped),
+                                    state.length > 0)
+        return jnp.stack([remove_ok, state.stopped], axis=-1)
+
+    def get_backward_action(self, state, action, next_state, params):
+        return jnp.where(action == self.stop_action, 1, 0)
+
+    def get_forward_action(self, state, bwd_action, prev_state, params):
+        b = jnp.arange(bwd_action.shape[0])
+        sym = state.tokens[b, jnp.maximum(state.length - 1, 0)]
+        return jnp.where(bwd_action == 1, self.stop_action, sym)
+
+    def terminal_state_from_tokens(self, tokens, lengths):
+        B = tokens.shape[0]
+        return SeqState(tokens=tokens.astype(jnp.int32),
+                        length=lengths.astype(jnp.int32),
+                        steps=lengths.astype(jnp.int32) + 1,
+                        stopped=jnp.ones((B,), bool))
+
+
+class AMPEnvironment(VariableLengthSeqEnvironment):
+    """Antimicrobial-peptide design (paper §3.5 / §B.2.2): variable-length
+    sequences up to 60 tokens over the 20-amino-acid vocabulary; proxy
+    classifier reward R = max(sigmoid(f(x)), r_min)."""
+
+    def __init__(self, reward_module=None, max_len: int = 60):
+        if reward_module is None:
+            from ..rewards.amp import AMPRewardModule
+            reward_module = AMPRewardModule(max_len=max_len)
+        super().__init__(reward_module, max_len=max_len, vocab=20)
+
+
+# ===========================================================================
+# Prepend/append (QM9)
+# ===========================================================================
+
+@pytree_dataclass
+class PrependAppendState:
+    buf: jax.Array      # (B, 2*max_len) scratch; content in [start, end)
+    start: jax.Array    # (B,)
+    end: jax.Array      # (B,)
+    steps: jax.Array    # (B,)
+
+
+class PrependAppendEnvironment(Environment):
+    """Fixed-length prepend/append generation (paper QM9 formulation):
+    2m actions = m appends + m prepends; terminal at ``length`` symbols.
+    Backward structural actions: {remove-front, remove-back}.
+    """
+
+    def __init__(self, reward_module, length: int, vocab: int):
+        self.reward_module = reward_module
+        self.length = length
+        self.vocab = vocab
+        self.pad = vocab
+        self.action_dim = 2 * vocab             # [append x m, prepend x m]
+        self.backward_action_dim = 2            # [front, back]
+        self.max_steps = length
+        self.vocab_size = vocab + 1
+
+    def init(self, key):
+        return self.reward_module.init(key)
+
+    def reset(self, num_envs, params):
+        W = 2 * self.length
+        state = PrependAppendState(
+            buf=jnp.full((num_envs, W), self.pad, jnp.int32),
+            start=jnp.full((num_envs,), self.length, jnp.int32),
+            end=jnp.full((num_envs,), self.length, jnp.int32),
+            steps=jnp.zeros((num_envs,), jnp.int32))
+        return self.observe(state, params), state
+
+    def _forward(self, state, action, params):
+        word = action % self.vocab
+        prepend = action >= self.vocab
+        b = jnp.arange(action.shape[0])
+        W = state.buf.shape[1]
+        pos = jnp.where(prepend, jnp.maximum(state.start - 1, 0),
+                        jnp.minimum(state.end, W - 1))
+        buf = state.buf.at[b, pos].set(word)
+        start = jnp.where(prepend, jnp.maximum(state.start - 1, 0),
+                          state.start)
+        end = jnp.where(prepend, state.end, jnp.minimum(state.end + 1, W))
+        return PrependAppendState(buf=buf, start=start, end=end,
+                                  steps=state.steps + 1)
+
+    def _backward(self, state, action, params):
+        front = action == 0
+        b = jnp.arange(action.shape[0])
+        pos = jnp.where(front, state.start, jnp.maximum(state.end - 1, 0))
+        buf = state.buf.at[b, pos].set(self.pad)
+        start = jnp.where(front, state.start + 1, state.start)
+        end = jnp.where(front, state.end, jnp.maximum(state.end - 1, 0))
+        return PrependAppendState(buf=buf, start=start, end=end,
+                                  steps=jnp.maximum(state.steps - 1, 0))
+
+    def seq_length(self, state):
+        return state.end - state.start
+
+    def is_terminal(self, state, params):
+        return self.seq_length(state) >= self.length
+
+    def is_initial(self, state, params):
+        return self.seq_length(state) == 0
+
+    def tokens_left_aligned(self, state):
+        """(B, length) left-aligned tokens (pad beyond current length)."""
+        B, W = state.buf.shape
+        idx = state.start[:, None] + jnp.arange(self.length)[None, :]
+        safe = jnp.clip(idx, 0, W - 1)
+        toks = jnp.take_along_axis(state.buf, safe, axis=1)
+        valid = jnp.arange(self.length)[None] < self.seq_length(state)[:, None]
+        return jnp.where(valid, toks, self.pad)
+
+    def log_reward(self, state, params):
+        return self.reward_module.log_reward(
+            self.tokens_left_aligned(state), self.seq_length(state), params)
+
+    def observe(self, state, params):
+        return self.tokens_left_aligned(state)
+
+    def forward_mask(self, state, params):
+        ok = self.seq_length(state) < self.length
+        return jnp.broadcast_to(ok[:, None],
+                                (state.start.shape[0], self.action_dim))
+
+    def backward_mask(self, state, params):
+        nonempty = self.seq_length(state) > 0
+        return jnp.broadcast_to(nonempty[:, None], (state.start.shape[0], 2))
+
+    def get_backward_action(self, state, action, next_state, params):
+        # append -> remove-back (1); prepend -> remove-front (0)
+        return jnp.where(action >= self.vocab, 0, 1)
+
+    def get_forward_action(self, state, bwd_action, prev_state, params):
+        b = jnp.arange(bwd_action.shape[0])
+        front_sym = state.buf[b, state.start]
+        back_sym = state.buf[b, jnp.maximum(state.end - 1, 0)]
+        # removing front -> the forward action was a prepend of front_sym
+        return jnp.where(bwd_action == 0, self.vocab + front_sym, back_sym)
+
+    def terminal_state_from_tokens(self, tokens: jax.Array
+                                   ) -> PrependAppendState:
+        B = tokens.shape[0]
+        W = 2 * self.length
+        buf = jnp.full((B, W), self.pad, jnp.int32)
+        buf = buf.at[:, :self.length].set(tokens.astype(jnp.int32))
+        return PrependAppendState(
+            buf=buf, start=jnp.zeros((B,), jnp.int32),
+            end=jnp.full((B,), self.length, jnp.int32),
+            steps=jnp.full((B,), self.length, jnp.int32))
+
+
+class QM9Environment(PrependAppendEnvironment):
+    """Small-molecule generation (paper §3.4): 11 building blocks, 2 stems,
+    5 blocks per molecule; proxy-model HOMO-LUMO-gap reward."""
+
+    def __init__(self, reward_module=None):
+        if reward_module is None:
+            from ..rewards.qm9 import QM9RewardModule
+            reward_module = QM9RewardModule()
+        super().__init__(reward_module, length=5, vocab=11)
+
+    def flatten_index(self, tokens: jax.Array) -> jax.Array:
+        idx = jnp.zeros(tokens.shape[:-1], jnp.int32)
+        for i in range(self.length):
+            idx = idx * self.vocab + tokens[..., i]
+        return idx

@@ -1,0 +1,49 @@
+"""Jitted public wrappers for the Pallas kernels (the ``ops.py`` contract).
+
+``interpret`` defaults to True because this container is CPU-only; on real
+TPU hardware pass ``interpret=False`` (or set REPRO_PALLAS_COMPILE=1) and
+the identical kernels lower through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .rwkv6_scan import rwkv6_scan_pallas
+from .subtb_loss import subtb_loss_pallas
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "kv_len",
+                                             "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    kv_len: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128) -> jax.Array:
+    """GQA flash attention.  q: (B, Sq, H, D); k/v: (B, Skv, KVH, D)."""
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  kv_len=kv_len, block_q=block_q,
+                                  block_k=block_k, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: Optional[jax.Array] = None, chunk: int = 64
+               ) -> Tuple[jax.Array, jax.Array]:
+    """RWKV6 wkv recurrence; returns (out, final_state)."""
+    return rwkv6_scan_pallas(r, k, v, w, u, chunk=chunk,
+                             interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "block"))
+def subtb_loss(phi: jax.Array, length: jax.Array, lam: float = 0.9,
+               block: int = 128) -> jax.Array:
+    """Per-trajectory SubTB(lambda) losses from potentials phi (B, T+1)."""
+    return subtb_loss_pallas(phi, length, lam=lam, block=block,
+                             interpret=_INTERPRET)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are deliberately naive O(S^2)/step-by-step implementations — slow,
+obviously correct, used by the per-kernel allclose test sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        q_offset: int = 0,
+                        kv_len: Optional[int] = None) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, KVH, D); GQA by head grouping."""
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    logits = jnp.einsum('bqhd,bkhd->bhqk', q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) / jnp.sqrt(D)
+    qp = q_offset + jnp.arange(Sq)
+    kp = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = jnp.logical_and(mask, kp[None, :] <= qp[:, None])
+    if window:
+        mask = jnp.logical_and(mask, kp[None, :] > qp[:, None] - window)
+    if kv_len is not None:
+        mask = jnp.logical_and(mask, (kp < kv_len)[None, :])
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    a = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum('bhqk,bkhd->bqhd', a, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: Optional[jax.Array] = None,
+              state: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Step-by-step wkv recurrence.  r/k/w: (B,T,H,Dk); v: (B,T,H,Dv)."""
+    B, T, H, Dk = r.shape
+    Dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (B, H, Dk/Dv)
+        o = jnp.einsum('bhd,bhde->bhe', rt, S)
+        if u is not None:
+            bonus = jnp.einsum('bhd,bhd->bh', rt * u.astype(jnp.float32), kt)
+            o = o + bonus[..., None] * vt
+        S = wt[..., None] * S + jnp.einsum('bhd,bhe->bhde', kt, vt)
+        return S, o
+
+    S, o = jax.lax.scan(step, state,
+                        (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+                         jnp.moveaxis(vf, 1, 0), jnp.moveaxis(wf, 1, 0)))
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype), S
+
+
+def ref_subtb(phi: jax.Array, length: jax.Array, lam: float) -> jax.Array:
+    """Per-trajectory SubTB(lambda) loss from flow-corrected potentials.
+
+    phi: (B, T+1) with phi_t = log F(s_t) - cumsum(log_pf - log_pb);
+    length: (B,) trajectory length n (states 0..n are on-trajectory).
+    loss_b = sum_{0<=j<k<=n} lam^(k-j) (phi_j - phi_k)^2 / sum w.
+    """
+    B, T1 = phi.shape
+    idx = jnp.arange(T1)
+    on = idx[None, :] <= length[:, None]                  # (B, T+1)
+    pair = jnp.logical_and(on[:, :, None], on[:, None, :])
+    pair = jnp.logical_and(pair, (idx[:, None] < idx[None, :])[None])
+    w = lam ** (idx[None, :] - idx[:, None]).astype(jnp.float32)
+    w = jnp.where(pair, w[None], 0.0)
+    resid = phi[:, :, None] - phi[:, None, :]
+    num = jnp.sum(w * jnp.square(resid), axis=(1, 2))
+    den = jnp.maximum(jnp.sum(w, axis=(1, 2)), 1e-9)
+    return num / den

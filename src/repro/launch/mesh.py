@@ -1,0 +1,30 @@
+"""Production mesh construction (assignment: MULTI-POD DRY-RUN step 1).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The single-pod mesh is 16 x 16 = 256 chips
+(TPU v5e pod); multi-pod adds a leading ``pod`` axis (2 pods = 512 chips).
+
+Axis roles (DESIGN.md §6):
+  pod   — data parallelism across the DCN (gradient all-reduce only)
+  data  — FSDP within a pod (param/optimizer sharding + per-layer all-gather)
+  model — tensor parallelism within a pod (heads / ffn / vocab / experts)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Generic mesh for tests/benchmarks (e.g. (1, 1) on one CPU device)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

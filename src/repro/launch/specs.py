@@ -1,0 +1,78 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input
+(assignment: MULTI-POD DRY-RUN step 2) — weak-type-correct, shardable, no
+device allocation.
+
+For ``[audio]``/``[vlm]`` archs the modality frontend is a STUB: specs carry
+precomputed frame/patch embeddings (+ M-RoPE position ids for the VLM).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {
+        "tokens": SDS((B, S), jnp.int32),
+        "targets": SDS((B, S), jnp.int32),
+        "mask": SDS((B, S), jnp.float32),
+        "log_reward": SDS((B,), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        specs["embeds"] = SDS((B, S), jnp.int32)  # replaced below
+        specs["embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        specs["position_ids"] = SDS((3, B, S), jnp.int32)
+        del specs["tokens"]
+    if cfg.family == "encdec":
+        specs["frames"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> Dict[str, Any]:
+    # prefill scores a full prompt; reuses the train inputs minus rewards
+    specs = train_input_specs(cfg, shape)
+    specs.pop("log_reward")
+    specs.pop("mask")
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                       ) -> Dict[str, Any]:
+    """One decode step with a KV cache of seq_len (assignment note: decode_*
+    lowers serve_step, not train_step)."""
+    from ..models import lm as LM
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: LM.init_cache(cfg, B, S))
+    specs: Dict[str, Any] = {
+        "tokens": SDS((B, 1), jnp.int32),
+        "cache": cache,
+    }
+    if cfg.family == "vlm":
+        specs["embeds"] = SDS((B, 1, cfg.d_model), jnp.bfloat16)
+        specs["position_ids"] = SDS((3, B, 1), jnp.int32)
+    if cfg.family == "encdec":
+        # cross-attention cache over stub encoder frames of length S
+        hd = cfg.resolved_head_dim
+        specs["cache"]["cross"] = {
+            "k": SDS((cfg.num_layers, B, S, cfg.num_kv_heads, hd),
+                     jnp.bfloat16),
+            "v": SDS((cfg.num_layers, B, S, cfg.num_kv_heads, hd),
+                     jnp.bfloat16),
+        }
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,150 @@
+"""Distributed train / prefill / serve steps for the LM policy zoo.
+
+``train_step``: GFlowNet-TB fine-tuning step (paper Eq. 4 with degenerate
+P_B for autoregressive token MDPs: L = (log Z + sum log p_theta - log R)^2)
+or plain CE pretraining, with AdamW (ZeRO-3-sharded states), global-norm
+clipping, and the MoE load-balancing aux loss.
+
+``serve_step``: one KV-cache decode step (greedy logits out).
+``prefill_step``: full-prompt scoring (last-token logits + per-token lps).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..distributed import sharding as shd
+from ..models import lm as LM
+from ..models.config import ModelConfig
+from ..optim import adamw as optim
+
+
+class LMTrainConfig(NamedTuple):
+    objective: str = "tb"        # tb | ce
+    lr: float = 3e-5
+    log_z_lr: float = 1e-2
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    grad_compression: Optional[str] = None   # None | "int8_ef" (pod axis)
+
+
+def make_optimizer(tcfg: LMTrainConfig):
+    lz_ratio = tcfg.log_z_lr / tcfg.lr
+    parts = []
+    if tcfg.grad_compression == "int8_ef":
+        # int8 wire-format with error feedback: models the cross-pod (DCN)
+        # all-reduce payload (4x vs f32); the EF buffer keeps the
+        # accumulated update unbiased (distributed/compress.py).
+        from ..distributed.compress import ef_int8_transform
+        parts.append(ef_int8_transform())
+    parts += [
+        optim.clip_by_global_norm(tcfg.max_grad_norm),
+        optim.scale_by_adam(b1=0.9, b2=0.95),
+        optim.add_decayed_weights(tcfg.weight_decay),
+        optim.scale_by_label(
+            lambda name: "log_z" if "log_z" in name else "default",
+            {"log_z": lz_ratio, "default": 1.0}),
+        optim.scale(-tcfg.lr),
+    ]
+    return optim.chain(*parts)
+
+
+def init_lm_params(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    return {"model": LM.init_params(key, cfg),
+            "log_z": jnp.zeros((), jnp.float32)}
+
+
+def loss_fn(params, cfg: ModelConfig, tcfg: LMTrainConfig,
+            batch: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    lp, aux = LM.forward_train(params["model"], cfg, batch)
+    mask = batch.get("mask")
+    lp = lp.astype(jnp.float32)
+    if mask is not None:
+        lp = lp * mask
+    log_pf = jnp.sum(lp, axis=-1)                     # (B,)
+    if tcfg.objective == "tb":
+        delta = params["log_z"] + log_pf - batch["log_reward"]
+        obj = jnp.mean(jnp.square(delta))
+    else:
+        denom = jnp.sum(mask) if mask is not None else lp.size
+        obj = -jnp.sum(lp) / jnp.maximum(denom, 1.0)
+    total = obj + aux
+    return total, {"loss": obj, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: LMTrainConfig):
+    tx = make_optimizer(tcfg)
+
+    def train_step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(
+            functools.partial(loss_fn, cfg=cfg, tcfg=tcfg, batch=batch),
+            has_aux=True)(params)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return train_step, tx
+
+
+def make_serve_step(cfg: ModelConfig):
+    def one(params, tokens, cache, extra):
+        logits, cache = LM.decode_step(
+            params["model"], cfg, tokens, cache,
+            embeds=extra.get("embeds"),
+            position_ids=extra.get("position_ids"))
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    if cfg.decode_steps <= 1:
+        return one
+
+    def serve_step(params, tokens, cache, extra):
+        """Fused multi-token decode: ``decode_steps`` autoregressive steps
+        per dispatch, amortizing per-step weight reads and launch overhead
+        (EXPERIMENTS.md §Perf, decode iterations)."""
+        def body(carry, _):
+            toks, cache = carry
+            nxt, logits, cache = one(params, toks, cache, extra)
+            return (nxt[:, None], cache), (nxt, logits)
+
+        (last, cache), (all_toks, all_logits) = jax.lax.scan(
+            body, (tokens, cache), None, length=cfg.decode_steps)
+        return all_toks[-1], all_logits[-1], cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        lp, _ = LM.forward_train(params["model"], cfg, batch)
+        return lp
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly for jit
+# ---------------------------------------------------------------------------
+
+def train_shardings(mesh, cfg: ModelConfig, params_shape, opt_shape,
+                    batch_shape):
+    p_specs = shd.param_specs(mesh, params_shape)
+
+    # optimizer state mirrors the params tree inside AdamState(mu, nu)
+    def opt_specs_of(shapes):
+        def walk(node):
+            if isinstance(node, optim.AdamState):
+                return optim.AdamState(P(), shd.param_specs(mesh, node.mu),
+                                       shd.param_specs(mesh, node.nu))
+            if isinstance(node, tuple):
+                return tuple(walk(x) for x in node)
+            return P()
+        return walk(shapes)
+
+    o_specs = opt_specs_of(opt_shape)
+    b_specs = shd.input_sharding_specs(mesh, batch_shape, cfg)
+    return p_specs, o_specs, b_specs

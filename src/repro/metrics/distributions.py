@@ -1,0 +1,86 @@
+"""Distribution-quality metrics (paper §B: TV, Pearson, JSD, marginals).
+
+GFlowNet evaluation differs from RL: raw return is not the score; we measure
+how close the sampler's terminal distribution is to R(x)/Z.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def empirical_distribution(flat_indices: jax.Array, num_states: int,
+                           weights: Optional[jax.Array] = None) -> jax.Array:
+    """Histogram of terminal-state indices -> empirical distribution."""
+    w = weights if weights is not None else jnp.ones_like(
+        flat_indices, jnp.float32)
+    counts = jnp.zeros((num_states,), jnp.float32).at[flat_indices].add(w)
+    return counts / jnp.maximum(jnp.sum(counts), 1e-9)
+
+
+def total_variation(p: jax.Array, q: jax.Array) -> jax.Array:
+    """TV(p, q) = 0.5 * sum |p - q| (paper Figs. 2 & 4 metric)."""
+    return 0.5 * jnp.sum(jnp.abs(p - q))
+
+
+def jensen_shannon(p: jax.Array, q: jax.Array) -> jax.Array:
+    """JSD (paper Eq. 15), natural log."""
+    m = 0.5 * (p + q)
+
+    def kl(a, b):
+        ratio = jnp.where(a > 0, a / jnp.maximum(b, 1e-38), 1.0)
+        return jnp.sum(jnp.where(a > 0, a * jnp.log(ratio), 0.0))
+
+    return 0.5 * kl(p, m) + 0.5 * kl(q, m)
+
+
+def pearson_correlation(x: jax.Array, y: jax.Array) -> jax.Array:
+    x = x - jnp.mean(x)
+    y = y - jnp.mean(y)
+    denom = jnp.sqrt(jnp.sum(x * x) * jnp.sum(y * y)) + 1e-12
+    return jnp.sum(x * y) / denom
+
+
+def spearman_correlation(x: jax.Array, y: jax.Array) -> jax.Array:
+    rx = jnp.argsort(jnp.argsort(x)).astype(jnp.float32)
+    ry = jnp.argsort(jnp.argsort(y)).astype(jnp.float32)
+    return pearson_correlation(rx, ry)
+
+
+def log_prob_mc_estimate(key: jax.Array, env, env_params, policy_apply,
+                         policy_params, terminal_state,
+                         num_samples: int = 10) -> jax.Array:
+    """Monte-Carlo estimate of log P_theta(x) (paper §B.2):
+
+        P_theta(x) = E_{P_B(tau|x)}[P_F(tau)/P_B(tau|x)]
+        ^P(x)      = 1/N sum_i P_F(tau_i)/P_B(tau_i|x)
+
+    computed in log-space with logsumexp for stability.  Uses the same P_B
+    that was trained/fixed with the model (lower estimator variance).
+    """
+    from ..core.rollout import backward_rollout
+
+    def one(k):
+        out = backward_rollout(k, env, env_params, policy_apply,
+                               policy_params, terminal_state)
+        return out.log_pf - out.log_pb
+
+    ratios = jax.vmap(one)(jax.random.split(key, num_samples))  # (N, B)
+    return jax.nn.logsumexp(ratios, axis=0) - jnp.log(num_samples)
+
+
+def topk_reward_and_diversity(rewards: jax.Array, objects: jax.Array,
+                              k: int = 100) -> Tuple[jax.Array, jax.Array]:
+    """Top-k mean reward + mean pairwise Hamming diversity of the top-k set
+    (paper Fig. 5 metric for AMP)."""
+    k = min(k, rewards.shape[0])
+    idx = jnp.argsort(-rewards)[:k]
+    top_r = rewards[idx]
+    top_x = objects[idx]
+    diff = (top_x[:, None, :] != top_x[None, :, :]).astype(jnp.float32)
+    ham = jnp.sum(diff, axis=-1)
+    off_diag = 1.0 - jnp.eye(k)
+    diversity = jnp.sum(ham * off_diag) / jnp.maximum(jnp.sum(off_diag), 1.0)
+    return jnp.mean(top_r), diversity

@@ -1,0 +1,229 @@
+"""Shared model layers: RMSNorm, RoPE/M-RoPE, gated MLP, chunked
+(flash-style) attention, and chunked linear-recurrence primitives.
+
+Attention is written as a KV-chunked streaming softmax (the flash-attention
+recurrence) in pure jnp so that (a) compiled memory stays O(S * chunk)
+instead of O(S^2) — required for the 32k dry-runs — and (b) the Pallas
+kernel in repro.kernels.flash_attention can swap in on TPU with identical
+semantics (``use_pallas`` flag on the model).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.core import Params, normal_init
+
+
+# ---------------------------------------------------------------------------
+# Norms / MLP
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def gated_mlp_init(key, d: int, ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 0.02, 0.02
+    return {"wi_gate": normal_init(k1, (d, ff), s_in, dtype),
+            "wi_up": normal_init(k2, (d, ff), s_in, dtype),
+            "wo": normal_init(k3, (ff, d), s_out, dtype)}
+
+
+def gated_mlp(p: Params, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ p["wi_gate"])
+    return (g * (x @ p["wi_up"])) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    return jnp.stack([xr1, xr2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, ...]) -> jax.Array:
+    """M-RoPE (qwen2-vl): positions (3, B, S) for (t, h, w); the D/2
+    frequency bands are partitioned into ``sections`` (sums to D/2), each
+    rotated by its own position component."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)                       # (D/2,)
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=D // 2)
+    # pick the position component per frequency band
+    pos = positions[sec_id]                          # (D/2, B, S)
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * inv  # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x2 * cos + x1 * sin
+    return jnp.stack([xr1, xr2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash) attention — pure-jnp oracle shared with the Pallas kernel
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_offset: jax.Array | int = 0,
+                    window: int = 0, kv_len: Optional[jax.Array] = None,
+                    chunk: int = 1024, logits_dtype=jnp.float32) -> jax.Array:
+    """Streaming-softmax attention with GQA head grouping.
+
+    q: (B, Sq, H, D);  k, v: (B, Skv, KVH, D) with H % KVH == 0.
+    q_offset: absolute position of q[0] (decode: cache length).
+    window: sliding-window size (0 = unlimited).
+    kv_len: actual valid kv length (for padded decode caches).
+    Memory: O(Sq * chunk) logits per step instead of O(Sq * Skv).
+    """
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, D)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    chunk = min(chunk, Skv)
+    n_chunks = (Skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KVH, D)
+    vc = v.reshape(B, n_chunks, chunk, KVH, D)
+
+    q_pos = (jnp.asarray(q_offset) + jnp.arange(Sq))          # (Sq,)
+    neg = jnp.asarray(-1e30, logits_dtype)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kci, vci, cidx = inp
+        k_pos = cidx * chunk + jnp.arange(chunk)
+        # (B, Sq, KVH, G, chunk)
+        logits = jnp.einsum('bqngd,bcnd->bqngc', qg.astype(logits_dtype),
+                            kci.astype(logits_dtype)) * scale
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask = jnp.logical_and(mask, k_pos[None, :] <= q_pos[:, None])
+        if window:
+            mask = jnp.logical_and(mask,
+                                   k_pos[None, :] > q_pos[:, None] - window)
+        if kv_len is not None:
+            mask = jnp.logical_and(mask, (k_pos < kv_len)[None, :])
+        else:
+            mask = jnp.logical_and(mask, (k_pos < Skv)[None, :])
+        logits = jnp.where(mask[None, :, None, None, :], logits, neg)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1)
+        pv = jnp.einsum('bqngc,bcnd->bqngd', p, vci.astype(logits_dtype))
+        acc_new = corr[..., None] * acc + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KVH, G), -jnp.inf, logits_dtype)
+    l0 = jnp.zeros((B, Sq, KVH, G), logits_dtype)
+    acc0 = jnp.zeros((B, Sq, KVH, G, D), logits_dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked linear recurrence (RWKV6 / mamba2-style SSM)
+# ---------------------------------------------------------------------------
+
+def chunked_linear_attention(r: jax.Array, k: jax.Array, v: jax.Array,
+                             w: jax.Array, u: Optional[jax.Array] = None,
+                             state: Optional[jax.Array] = None,
+                             chunk: int = 64
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Linear attention with per-channel decay (RWKV6 wkv form).
+
+    Recurrence per head:  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+                          o_t = r_t S_{t-1} + (r_t * u * k_t) . v_t  (u bonus)
+    Shapes: r/k/w: (B, T, H, Dk); v: (B, T, H, Dv); u: (H, Dk) or None;
+    state: (B, H, Dk, Dv).  RWKV6 uses Dk == Dv == head_size; the mamba2 /
+    GLA-style SSM branch uses Dk = state size N, Dv = head dim.
+    Returns (o: (B, T, H, Dv), state_out).  Chunked O(T * chunk) compute
+    with log-space decay products for stability — the pure-jnp oracle for
+    kernels/rwkv6_scan.
+    """
+    B, T, H, D = r.shape
+    Dv = v.shape[-1]
+    chunk = min(chunk, T)
+    n = (T + chunk - 1) // chunk
+    pad = n * chunk - T
+    if pad:
+        padv = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = padv(r), padv(k), padv(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    if state is None:
+        state = jnp.zeros((B, H, D, Dv), jnp.float32)
+
+    rc = r.reshape(B, n, chunk, H, D)
+    kc = k.reshape(B, n, chunk, H, D)
+    vc = v.reshape(B, n, chunk, H, Dv)
+    wc = w.reshape(B, n, chunk, H, D)
+
+    def step(S, inp):
+        rq, kk, vv, ww = inp                       # (B, c, H, D)
+        logw = jnp.log(jnp.clip(ww.astype(jnp.float32), 1e-8, 1.0))
+        cum = jnp.cumsum(logw, axis=1)             # prod_{s<=t} w_s
+        W_incl = jnp.exp(cum)
+        W_excl = jnp.exp(cum - logw)               # prod_{s<t} w_s
+        r_t = rq.astype(jnp.float32) * W_excl      # r~
+        k_t = kk.astype(jnp.float32) / jnp.maximum(W_incl, 1e-30)  # k~
+        vf = vv.astype(jnp.float32)
+        # inter-chunk: o += r~ @ S
+        o = jnp.einsum('bchd,bhde->bche', r_t, S)
+        # intra-chunk strict lower triangle
+        A = jnp.einsum('bchd,bshd->bhcs', r_t, k_t)
+        tril = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        A = jnp.where(tril[None, None], A, 0.0)
+        o = o + jnp.einsum('bhcs,bshe->bche', A, vf)
+        if u is not None:
+            diag = jnp.einsum('bchd,bchd->bch',
+                              rq.astype(jnp.float32) * u.astype(jnp.float32),
+                              kk.astype(jnp.float32))
+            o = o + diag[..., None] * vf
+        W_last = jnp.exp(cum[:, -1])               # (B, H, D)
+        S_new = W_last[..., None] * S + jnp.einsum(
+            'bchd,bche->bhde', k_t * W_last[:, None], vf)
+        return S_new, o
+
+    state_out, oc = jax.lax.scan(
+        step, state,
+        (jnp.moveaxis(rc, 1, 0), jnp.moveaxis(kc, 1, 0),
+         jnp.moveaxis(vc, 1, 0), jnp.moveaxis(wc, 1, 0)))
+    o = jnp.moveaxis(oc, 0, 1).reshape(B, n * chunk, H, Dv)[:, :T]
+    return o.astype(r.dtype), state_out

@@ -1,0 +1,130 @@
+"""Minimal pure-JAX neural-network substrate.
+
+No flax/equinox available offline, so we ship a small functional module
+system: every module is a pair of pure functions ``init(key, ...) -> params``
+and ``apply(params, x, ...) -> y`` operating on plain dict pytrees.  This is
+the same contract the paper's Equinox models satisfy (stateless, jit-able,
+grad-able) without the dependency.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def uniform_init(key: jax.Array, shape: Sequence[int], scale: float,
+                 dtype=jnp.float32) -> jax.Array:
+    return jax.random.uniform(key, shape, dtype, minval=-scale, maxval=scale)
+
+
+def lecun_normal(key: jax.Array, shape: Sequence[int], in_axis: int = 0,
+                 dtype=jnp.float32) -> jax.Array:
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def normal_init(key: jax.Array, shape: Sequence[int], std: float = 0.02,
+                dtype=jnp.float32) -> jax.Array:
+    return std * jax.random.normal(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, in_dim: int, out_dim: int, *, bias: bool = True,
+               dtype=jnp.float32) -> Params:
+    kw, _ = jax.random.split(key)
+    p: Params = {"w": lecun_normal(kw, (in_dim, out_dim), dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * p["scale"] + p["bias"]
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key: jax.Array, vocab: int, dim: int,
+                   dtype=jnp.float32) -> Params:
+    return {"table": normal_init(key, (vocab, dim), std=0.02, dtype=dtype)}
+
+
+def embedding_apply(p: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, in_dim: int, hidden: Sequence[int], out_dim: int,
+             *, bias: bool = True, dtype=jnp.float32) -> Params:
+    dims = [in_dim, *hidden, out_dim]
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"layer_{i}": dense_init(keys[i], dims[i], dims[i + 1], bias=bias,
+                                 dtype=dtype)
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array,
+              activation: Callable[[jax.Array], jax.Array] = jax.nn.relu
+              ) -> jax.Array:
+    n = len(p)
+    for i in range(n):
+        x = dense_apply(p[f"layer_{i}"], x)
+        if i < n - 1:
+            x = activation(x)
+    return x
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, params)

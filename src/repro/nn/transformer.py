@@ -1,0 +1,74 @@
+"""Small transformer encoder used by GFlowNet sequence policies.
+
+Mirrors the paper's policy parameterization for bit-sequences / AMP /
+phylogenetic trees: N encoder layers, multi-head attention, GELU MLP,
+pre-LayerNorm, no dropout at inference (the paper uses dropout 0 everywhere
+except phylo's 0.01, which we support but default off; dropout under jit uses
+an explicit rng).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .core import (Params, dense_apply, dense_init, layernorm_apply,
+                   layernorm_init, normal_init)
+
+
+def encoder_init(key: jax.Array, *, num_layers: int, dim: int, num_heads: int,
+                 ff_dim: Optional[int] = None, dtype=jnp.float32) -> Params:
+    ff_dim = ff_dim if ff_dim is not None else 4 * dim
+    keys = jax.random.split(key, num_layers)
+    layers = {}
+    for i, k in enumerate(keys):
+        ks = jax.random.split(k, 4)
+        layers[f"layer_{i}"] = {
+            "ln1": layernorm_init(dim, dtype),
+            "qkv": dense_init(ks[0], dim, 3 * dim, dtype=dtype),
+            "proj": dense_init(ks[1], dim, dim, dtype=dtype),
+            "ln2": layernorm_init(dim, dtype),
+            "ff1": dense_init(ks[2], dim, ff_dim, dtype=dtype),
+            "ff2": dense_init(ks[3], ff_dim, dim, dtype=dtype),
+        }
+    layers["ln_f"] = layernorm_init(dim, dtype)
+    return layers
+
+
+def _mha(p: Params, x: jax.Array, num_heads: int,
+         mask: Optional[jax.Array], causal: bool) -> jax.Array:
+    B, S, D = x.shape
+    hd = D // num_heads
+    qkv = dense_apply(p["qkv"], x).reshape(B, S, 3, num_heads, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(hd).astype(x.dtype)
+    neg = jnp.asarray(jnp.finfo(logits.dtype).min, logits.dtype)
+    if causal:
+        cm = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(cm[None, None], logits, neg)
+    if mask is not None:
+        # mask: (B, S) validity of keys
+        logits = jnp.where(mask[:, None, None, :], logits, neg)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(B, S, D)
+    return dense_apply(p["proj"], out)
+
+
+def encoder_apply(p: Params, x: jax.Array, *, num_heads: int,
+                  mask: Optional[jax.Array] = None,
+                  causal: bool = False) -> jax.Array:
+    """x: (B, S, D) token embeddings; mask: (B, S) True=valid."""
+    num_layers = sum(1 for k in p if k.startswith("layer_"))
+    for i in range(num_layers):
+        lp = p[f"layer_{i}"]
+        x = x + _mha(lp, layernorm_apply(lp["ln1"], x), num_heads, mask, causal)
+        h = layernorm_apply(lp["ln2"], x)
+        h = dense_apply(lp["ff2"], jax.nn.gelu(dense_apply(lp["ff1"], h)))
+        x = x + h
+    return layernorm_apply(p["ln_f"], x)
+
+
+def positional_embedding_init(key: jax.Array, max_len: int, dim: int,
+                              dtype=jnp.float32) -> Params:
+    return {"pos": normal_init(key, (max_len, dim), std=0.02, dtype=dtype)}

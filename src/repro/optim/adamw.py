@@ -1,0 +1,189 @@
+"""Optimizers from scratch (no optax offline) with an optax-like contract:
+
+    tx = adamw(lr=1e-3); state = tx.init(params)
+    updates, state = tx.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Includes: adam/adamw, global-norm clipping, schedules, chaining, and
+label-based per-group learning rates (the paper trains log Z with its own
+learning rate: 0.1 / 0.05 / 0.64 depending on the environment).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+tmap = jax.tree_util.tree_map
+
+
+class Transform(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return tmap(lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+                params, updates)
+
+
+def chain(*txs: Transform) -> Transform:
+    def init(params):
+        return tuple(t.init(params) for t in txs)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(txs, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return Transform(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Transform:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        leaves = jax.tree_util.tree_leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+        return tmap(lambda g: g * scale, grads), state
+
+    return Transform(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: Params
+    nu: Params
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999,
+                  eps: float = 1e-8) -> Transform:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32), tmap(z, params),
+                         tmap(z, params))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        mu = tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                  state.mu, grads)
+        nu = tmap(lambda v, g: b2 * v
+                  + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                  state.nu, grads)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = tmap(
+            lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu)
+        return updates, AdamState(count, mu, nu)
+
+    return Transform(init, update)
+
+
+def add_decayed_weights(weight_decay: float,
+                        mask: Optional[Callable] = None) -> Transform:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        if weight_decay == 0.0 or params is None:
+            return grads, state
+        def add(g, p):
+            return g + weight_decay * p.astype(jnp.float32)
+        if mask is not None:
+            grads = tmap(lambda g, p, m: add(g, p) if m else g, grads, params,
+                         mask(params))
+        else:
+            grads = tmap(add, grads, params)
+        return grads, state
+
+    return Transform(init, update)
+
+
+def scale(factor: float) -> Transform:
+    return Transform(lambda p: (),
+                     lambda g, s, p=None: (tmap(lambda x: factor * x, g), s))
+
+
+def scale_by_schedule(schedule: Callable[[jax.Array], jax.Array]) -> Transform:
+    def init(params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, state, params=None):
+        lr = schedule(state)
+        return tmap(lambda g: -lr * g, grads), state + 1
+
+    return Transform(init, update)
+
+
+def scale_by_label(label_fn: Callable[[str], str],
+                   lrs: dict) -> Transform:
+    """Per-leaf learning-rate groups by param path label."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+        out = []
+        for path, g in flat:
+            name = "/".join(str(getattr(k, "key", k)) for k in path)
+            out.append(lrs[label_fn(name)] * g)
+        return jax.tree_util.tree_unflatten(treedef, out), state
+
+    return Transform(init, update)
+
+
+def adam(lr: float | Callable, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         max_grad_norm: Optional[float] = None) -> Transform:
+    parts = []
+    if max_grad_norm is not None:
+        parts.append(clip_by_global_norm(max_grad_norm))
+    parts.append(scale_by_adam(b1, b2, eps))
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay))
+    if callable(lr):
+        parts.append(scale_by_schedule(lr))  # applies -lr(step) * g
+    else:
+        parts.append(scale(-lr))
+    return chain(*parts)
+
+
+def adamw(lr: float | Callable, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 1e-5,
+          max_grad_norm: Optional[float] = None) -> Transform:
+    return adam(lr, b1, b2, eps, weight_decay, max_grad_norm)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0,
+                    final_lr: float = 0.0) -> Callable[[jax.Array], jax.Array]:
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = base_lr * c / jnp.maximum(warmup, 1)
+        prog = jnp.clip((c - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = final_lr + 0.5 * (base_lr - final_lr) * (1 + jnp.cos(
+            jnp.pi * prog))
+        return jnp.where(c < warmup, warm, cos)
+
+    return sched
+
+
+def linear_anneal(start: float, end: float, steps: int
+                  ) -> Callable[[jax.Array], jax.Array]:
+    def sched(count):
+        frac = jnp.clip(count.astype(jnp.float32) / max(steps, 1), 0.0, 1.0)
+        return start + (end - start) * frac
+
+    return sched

@@ -1,0 +1,60 @@
+"""AMP reward (paper §3.5 / §B.2.2): antimicrobial-peptide proxy classifier.
+
+R(x) = max(sigmoid(f_phi(x)), r_min) with f_phi a sequence classifier
+(paper: trained on 3219 AMP / 4611 non-AMP sequences from DBAASP).  Offline
+substitute (DESIGN.md §2): a seeded transformer classifier with the same
+architecture the paper's policies use (3 layers, 8 heads, dim 64);
+``proxy/train_amp_proxy.py`` fits the same classifier on synthetic labels to
+demonstrate the dataset-driven path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.core import dense_apply, dense_init, embedding_apply, embedding_init
+from ..nn.transformer import (encoder_apply, encoder_init,
+                              positional_embedding_init)
+
+
+class AMPRewardModule:
+    def __init__(self, max_len: int = 60, vocab: int = 20,
+                 r_min: float = 1e-4, seed: int = 0, dim: int = 64,
+                 num_layers: int = 3, num_heads: int = 8):
+        self.max_len = max_len
+        self.vocab = vocab
+        self.pad = vocab
+        self.r_min = r_min
+        self.seed = seed
+        self.dim = dim
+        self.num_layers = num_layers
+        self.num_heads = num_heads
+
+    def init(self, key: jax.Array) -> dict:
+        del key
+        k = jax.random.PRNGKey(self.seed)
+        ks = jax.random.split(k, 4)
+        return {
+            "embed": embedding_init(ks[0], self.vocab + 1, self.dim),
+            "pos": positional_embedding_init(ks[1], self.max_len, self.dim),
+            "encoder": encoder_init(ks[2], num_layers=self.num_layers,
+                                    dim=self.dim, num_heads=self.num_heads),
+            "head": dense_init(ks[3], self.dim, 1),
+            "r_min": jnp.float32(self.r_min),
+        }
+
+    def classifier_logit(self, tokens: jax.Array, length: jax.Array,
+                         params: dict) -> jax.Array:
+        mask = jnp.arange(tokens.shape[-1])[None] < length[:, None]
+        x = embedding_apply(params["embed"], jnp.clip(tokens, 0, self.vocab))
+        x = x + params["pos"]["pos"][None, :tokens.shape[-1]]
+        h = encoder_apply(params["encoder"], x, num_heads=self.num_heads,
+                          mask=mask)
+        pooled = jnp.sum(jnp.where(mask[..., None], h, 0.0), axis=1) \
+            / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1)
+        return dense_apply(params["head"], pooled)[..., 0]
+
+    def log_reward(self, tokens: jax.Array, length: jax.Array,
+                   params: dict) -> jax.Array:
+        p = jax.nn.sigmoid(self.classifier_logit(tokens, length, params))
+        return jnp.log(jnp.maximum(p, params["r_min"]))

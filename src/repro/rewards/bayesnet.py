@@ -1,0 +1,265 @@
+"""Bayesian-network structure scores (paper §B.4).
+
+Implements the two modular marginal-likelihood scores the paper ships:
+  - linear-Gaussian (Bayesian linear-regression evidence per node)
+  - BGe (Bayesian Gaussian equivalent; Geiger & Heckerman 1994, in the
+    Kuipers–Moffa parameterization with alpha_mu, alpha_w, T = t*I)
+
+Both decompose as log R(G) = sum_j LocalScore(X_j | Pa_G(X_j)) (Eq. 12), so
+adding an edge u -> v changes only v's local term (delta score, Eq. 13).
+For d nodes we precompute LocalScore(j | S) for every parent-set bitmask as a
+(d, 2^d) table; the environment evaluates rewards and delta scores by table
+lookup — O(1) per step, the paper's "efficient computation of the delta
+score" consumed by the MDB loss.
+
+Dataset generation (paper "Dataset Generation Process"): ground-truth DAG
+from Erdős–Rényi with expected in-degree 1, linear-Gaussian CPDs with
+w_ij ~ N(0,1), sigma_j^2 = 0.1, ancestral sampling of 100 observations.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_LGAMMA = np.vectorize(math.lgamma)
+
+
+# ---------------------------------------------------------------------------
+# Dataset generation (paper Eq. 14)
+# ---------------------------------------------------------------------------
+
+def sample_erdos_renyi_dag(rng: np.random.RandomState, d: int,
+                           expected_in_degree: float = 1.0) -> np.ndarray:
+    """Upper-triangular-under-random-permutation ER DAG."""
+    p = min(1.0, expected_in_degree * 2.0 / max(d - 1, 1))
+    perm = rng.permutation(d)
+    adj = np.zeros((d, d), np.int8)
+    for i in range(d):
+        for j in range(i + 1, d):
+            if rng.rand() < p:
+                adj[perm[i], perm[j]] = 1
+    return adj
+
+
+def sample_linear_gaussian_data(rng: np.random.RandomState, adj: np.ndarray,
+                                num_samples: int = 100,
+                                noise_var: float = 0.1) -> np.ndarray:
+    """Ancestral sampling with w_ij ~ N(0,1), sigma^2 = noise_var."""
+    d = adj.shape[0]
+    W = rng.randn(d, d) * adj
+    order = topological_order(adj)
+    X = np.zeros((num_samples, d))
+    for j in order:
+        mean = X @ W[:, j]
+        X[:, j] = mean + math.sqrt(noise_var) * rng.randn(num_samples)
+    return X
+
+
+def topological_order(adj: np.ndarray) -> list:
+    d = adj.shape[0]
+    in_deg = adj.sum(0).astype(int)
+    order, stack = [], [j for j in range(d) if in_deg[j] == 0]
+    while stack:
+        u = stack.pop()
+        order.append(u)
+        for v in range(d):
+            if adj[u, v]:
+                in_deg[v] -= 1
+                if in_deg[v] == 0:
+                    stack.append(v)
+    assert len(order) == d, "graph has a cycle"
+    return order
+
+
+# ---------------------------------------------------------------------------
+# Local-score tables
+# ---------------------------------------------------------------------------
+
+def _parent_indices(mask: int, d: int) -> list:
+    return [i for i in range(d) if (mask >> i) & 1]
+
+
+def linear_gaussian_score_table(X: np.ndarray, noise_var: float = 0.1,
+                                prior_var: float = 1.0) -> np.ndarray:
+    """(d, 2^d) table of Bayesian linear-regression log evidences.
+
+    y_j | X_S ~ N(0, prior_var * X_S X_S^T + noise_var * I); evaluated in
+    parent-dimension via the Woodbury identity.
+    """
+    N, d = X.shape
+    table = np.full((d, 2 ** d), -np.inf)
+    for j in range(d):
+        y = X[:, j]
+        yy = float(y @ y)
+        for mask in range(2 ** d):
+            if (mask >> j) & 1:
+                continue  # j cannot be its own parent
+            S = _parent_indices(mask, d)
+            p = len(S)
+            if p == 0:
+                logdet = N * math.log(noise_var)
+                quad = yy / noise_var
+            else:
+                Xs = X[:, S]
+                G = Xs.T @ Xs
+                A = np.eye(p) + (prior_var / noise_var) * G
+                sign, ld = np.linalg.slogdet(A)
+                logdet = N * math.log(noise_var) + ld
+                b = Xs.T @ y
+                quad = (yy - (prior_var / noise_var)
+                        * float(b @ np.linalg.solve(A, b))) / noise_var
+            table[j, mask] = -0.5 * (N * math.log(2 * math.pi)
+                                     + logdet + quad)
+    return table
+
+
+def bge_score_table(X: np.ndarray, alpha_mu: float = 1.0,
+                    alpha_w: float | None = None) -> np.ndarray:
+    """(d, 2^d) BGe local scores (score-equivalent; tested by checking that
+    Markov-equivalent DAGs receive identical total scores)."""
+    N, d = X.shape
+    if alpha_w is None:
+        alpha_w = d + 2.0
+    t = alpha_mu * (alpha_w - d - 1.0) / (alpha_mu + 1.0)
+    xbar = X.mean(0)
+    Xc = X - xbar
+    R = t * np.eye(d) + Xc.T @ Xc \
+        + (N * alpha_mu / (N + alpha_mu)) * np.outer(xbar, xbar)
+
+    def logdet_sub(idx):
+        if len(idx) == 0:
+            return 0.0
+        sub = R[np.ix_(idx, idx)]
+        sign, ld = np.linalg.slogdet(sub)
+        return float(ld)
+
+    table = np.full((d, 2 ** d), -np.inf)
+    for j in range(d):
+        for mask in range(2 ** d):
+            if (mask >> j) & 1:
+                continue
+            S = _parent_indices(mask, d)
+            p = len(S)
+            const = (0.5 * (math.log(alpha_mu) - math.log(N + alpha_mu))
+                     + _LGAMMA(0.5 * (N + alpha_w - d + p + 1))
+                     - _LGAMMA(0.5 * (alpha_w - d + p + 1))
+                     - 0.5 * N * math.log(math.pi)
+                     + 0.5 * (alpha_w - d + 2 * p + 1) * math.log(t))
+            ld_P = logdet_sub(S)
+            ld_Q = logdet_sub(S + [j])
+            table[j, mask] = (const
+                              + 0.5 * (N + alpha_w - d + p) * ld_P
+                              - 0.5 * (N + alpha_w - d + p + 1) * ld_Q)
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Exact posterior by DAG enumeration (29 281 DAGs at d = 5)
+# ---------------------------------------------------------------------------
+
+def enumerate_dags(d: int) -> np.ndarray:
+    """All DAG adjacency matrices over d labeled nodes, shape (n_dags, d, d).
+
+    Enumerates the 2^(d(d-1)) off-diagonal masks in chunks and filters by
+    nilpotency of the adjacency matrix.  d <= 5 is the paper's setting.
+    """
+    off = [(i, j) for i in range(d) for j in range(d) if i != j]
+    n_bits = len(off)
+    n_total = 1 << n_bits
+    keep = []
+    chunk = 1 << 16
+    for lo in range(0, n_total, chunk):
+        ids = np.arange(lo, min(lo + chunk, n_total), dtype=np.int64)
+        A = np.zeros((ids.size, d, d), np.float32)
+        for b, (i, j) in enumerate(off):
+            A[:, i, j] = (ids >> b) & 1
+        M = A.copy()
+        acyclic = np.ones(ids.size, bool)
+        for _ in range(d - 1):
+            acyclic &= (np.einsum('bii->b', M) == 0)
+            M = (M @ A > 0).astype(np.float32)
+        acyclic &= (np.einsum('bii->b', M) == 0)
+        keep.append(A[acyclic].astype(np.int8))
+    return np.concatenate(keep, axis=0)
+
+
+def dag_log_scores(dags: np.ndarray, table: np.ndarray) -> np.ndarray:
+    """log R(G) per enumerated DAG from a local-score table."""
+    n, d, _ = dags.shape
+    pw = (1 << np.arange(d)).astype(np.int64)
+    masks = (dags.astype(np.int64) * pw[:, None]).sum(1)  # (n, d) col masks
+    out = np.zeros(n)
+    for j in range(d):
+        out += table[j, masks[:, j]]
+    return out
+
+
+def exact_posterior(dags: np.ndarray, table: np.ndarray) -> np.ndarray:
+    ls = dag_log_scores(dags, table)
+    ls = ls - ls.max()
+    p = np.exp(ls)
+    return p / p.sum()
+
+
+# ---------------------------------------------------------------------------
+# Structural-feature marginals (paper Eqs. 16-18)
+# ---------------------------------------------------------------------------
+
+def edge_marginals(dags: np.ndarray, post: np.ndarray) -> np.ndarray:
+    return np.einsum('n,nij->ij', post, dags.astype(np.float64))
+
+def path_marginals(dags: np.ndarray, post: np.ndarray) -> np.ndarray:
+    d = dags.shape[1]
+    reach = dags.astype(np.float64)
+    closure = reach.copy()
+    for _ in range(d - 1):
+        closure = np.minimum(closure + np.matmul(closure, reach), 1.0)
+    return np.einsum('n,nij->ij', post, closure)
+
+def markov_blanket_marginals(dags: np.ndarray, post: np.ndarray) -> np.ndarray:
+    A = dags.astype(np.float64)
+    parent = np.transpose(A, (0, 2, 1))      # parent[j, i] = i -> j ... (b,i,j)
+    child = A
+    coparent = np.minimum(np.matmul(A, np.transpose(A, (0, 2, 1))), 1.0)
+    mb = np.minimum(parent + child + coparent, 1.0)
+    d = dags.shape[1]
+    for b in range(mb.shape[0]):
+        np.fill_diagonal(mb[b], 0.0)
+    return np.einsum('n,nij->ij', post, mb)
+
+
+class BayesNetRewardModule:
+    """Bundles dataset + score table as the environment's reward params."""
+
+    def __init__(self, d: int = 5, num_samples: int = 100,
+                 score: str = "bge", seed: int = 0,
+                 expected_in_degree: float = 1.0, noise_var: float = 0.1):
+        self.d = d
+        self.num_samples = num_samples
+        self.score = score
+        self.seed = seed
+        self.expected_in_degree = expected_in_degree
+        self.noise_var = noise_var
+
+    def init(self, key: jax.Array) -> dict:
+        del key
+        rng = np.random.RandomState(self.seed)
+        adj = sample_erdos_renyi_dag(rng, self.d, self.expected_in_degree)
+        X = sample_linear_gaussian_data(rng, adj, self.num_samples,
+                                        self.noise_var)
+        if self.score == "bge":
+            table = bge_score_table(X)
+        elif self.score == "lingauss":
+            table = linear_gaussian_score_table(X, self.noise_var)
+        else:
+            raise ValueError(self.score)
+        return {
+            "table": jnp.asarray(table, jnp.float32),
+            "empty_score": jnp.float32(table[:, 0].sum()),
+            "true_adj": jnp.asarray(adj, jnp.int8),
+            "data": jnp.asarray(X, jnp.float32),
+        }

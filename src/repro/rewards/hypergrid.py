@@ -1,0 +1,34 @@
+"""Hypergrid reward modules (paper Eq. 8).
+
+R(s) = R0 + R1 * prod_i I[0.25 < |s_i/(H-1) - 0.5|]
+          + R2 * prod_i I[0.3  < |s_i/(H-1) - 0.5| < 0.4]
+
+with the standard parameters (R0, R1, R2) = (1e-3, 0.5, 2.0) from
+Bengio et al. 2021.  ``EasyHypergridRewardModule`` uses a flatter R0=1e-1
+variant commonly used for smoke examples (paper Listing 1 uses it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class HypergridRewardModule:
+    def __init__(self, r0: float = 1e-3, r1: float = 0.5, r2: float = 2.0):
+        self.r0, self.r1, self.r2 = r0, r1, r2
+
+    def init(self, key: jax.Array, dim: int, side: int) -> dict:
+        return {"r0": jnp.float32(self.r0), "r1": jnp.float32(self.r1),
+                "r2": jnp.float32(self.r2)}
+
+    def log_reward(self, pos: jax.Array, rp: dict, side: int) -> jax.Array:
+        x = jnp.abs(pos.astype(jnp.float32) / (side - 1) - 0.5)
+        t1 = jnp.all(x > 0.25, axis=-1).astype(jnp.float32)
+        t2 = jnp.all(jnp.logical_and(x > 0.3, x < 0.4), axis=-1)
+        r = rp["r0"] + rp["r1"] * t1 + rp["r2"] * t2.astype(jnp.float32)
+        return jnp.log(r)
+
+
+class EasyHypergridRewardModule(HypergridRewardModule):
+    def __init__(self):
+        super().__init__(r0=1e-1, r1=0.5, r2=2.0)

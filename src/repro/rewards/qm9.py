@@ -1,0 +1,51 @@
+"""QM9 reward (paper §3.4): proxy model predicting the HOMO-LUMO gap of a
+5-block molecule assembled from 11 building blocks with 2 stems.
+
+Offline substitute for the pre-trained proxy of Shen et al. 2023 (see
+DESIGN.md §2): a small seeded MLP over the one-hot block sequence whose
+output is squashed to a plausible gap range; ``proxy/train_qm9_proxy.py``
+shows how a dataset-driven proxy would be fitted with the same interface.
+
+R(x) = gap_proxy(x) ** beta (reward exponent beta = 10, paper Table 4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.core import mlp_apply, mlp_init
+
+
+class QM9RewardModule:
+    def __init__(self, beta: float = 10.0, seed: int = 0, length: int = 5,
+                 vocab: int = 11):
+        self.beta = beta
+        self.seed = seed
+        self.length = length
+        self.vocab = vocab
+
+    def init(self, key: jax.Array) -> dict:
+        del key  # proxy weights are a fixed asset, not per-run randomness
+        k = jax.random.PRNGKey(self.seed)
+        proxy = mlp_init(k, self.length * self.vocab, [64, 64], 1)
+        return {"proxy": proxy, "beta": jnp.float32(self.beta)}
+
+    def proxy_score(self, tokens: jax.Array, params: dict) -> jax.Array:
+        x = jax.nn.one_hot(jnp.clip(tokens, 0, self.vocab - 1), self.vocab)
+        x = x.reshape(x.shape[:-2] + (self.length * self.vocab,))
+        out = mlp_apply(params["proxy"], x, activation=jax.nn.tanh)[..., 0]
+        return 0.05 + 0.95 * jax.nn.sigmoid(2.0 * out)   # (0.05, 1.0)
+
+    def log_reward(self, tokens: jax.Array, length: jax.Array,
+                   params: dict) -> jax.Array:
+        return params["beta"] * jnp.log(self.proxy_score(tokens, params))
+
+    def true_log_rewards(self, params: dict) -> jax.Array:
+        """log R over all 11^5 = 161051 sequences (flat base-11 order)."""
+        n = self.vocab ** self.length
+        idx = jnp.arange(n)
+        toks = []
+        for i in range(self.length - 1, -1, -1):
+            toks.append((idx // (self.vocab ** i)) % self.vocab)
+        tokens = jnp.stack(toks, axis=-1)
+        return params["beta"] * jnp.log(self.proxy_score(tokens, params))

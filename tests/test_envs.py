@@ -1,0 +1,403 @@
+"""Environment unit tests: dynamics, masks, rewards, reversibility."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core.policies import (make_mlp_policy, make_phylo_policy,
+                                 make_transformer_policy)
+from repro.envs.phylo import PhyloEnvironment
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tree_allclose(a, b):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    return all(np.allclose(np.asarray(x), np.asarray(y)) for x, y in
+               zip(fa, fb))
+
+
+# ---------------------------------------------------------------------------
+# Hypergrid
+# ---------------------------------------------------------------------------
+
+class TestHypergrid:
+    def setup_method(self):
+        self.env = repro.HypergridEnvironment(dim=3, side=5)
+        self.params = self.env.init(KEY)
+
+    def test_listing1_semantics(self):
+        """The paper's Listing 1 runs verbatim-equivalent here."""
+        env, params = self.env, self.params
+        obs, state = env.reset(1, params)
+        action = jnp.array([0], dtype=jnp.int32)
+        obs, state, log_reward, done, _ = env.step(state, action, params)
+        assert not bool(state.terminal[0])
+        assert float(log_reward[0]) == 0.0
+        stop = jnp.array([env.action_dim - 1], dtype=jnp.int32)
+        obs, state, log_reward, done, _ = env.step(state, stop, params)
+        assert bool(state.terminal[0])
+        assert float(log_reward[0]) != 0.0
+
+    def test_listing2_backward_inverts_forward(self):
+        """Paper Listing 2: backward_step inverts step exactly."""
+        env, params = self.env, self.params
+        obs, state = env.reset(1, params)
+        action = jnp.array([0], dtype=jnp.int32)
+        _, next_state, _, _, _ = env.step(state, action, params)
+        bwd = env.get_backward_action(state, action, next_state, params)
+        _, prev, _, _, _ = env.backward_step(next_state, bwd, params)
+        assert tree_allclose(state, prev)
+
+    def test_boundary_mask(self):
+        env, params = self.env, self.params
+        obs, state = env.reset(2, params)
+        # walk coordinate 0 to the boundary
+        a = jnp.zeros((2,), jnp.int32)
+        for _ in range(4):
+            _, state, _, _, _ = env.step(state, a, params)
+        mask = env.forward_mask(state, params)
+        assert not bool(mask[0, 0])         # coord 0 is at side-1
+        assert bool(mask[0, env.dim])       # stop is allowed
+
+    def test_reward_closed_form(self):
+        env, params = self.env, self.params
+        # corner (4,4,4): |s/(H-1)-0.5| = 0.5 > 0.25 but not in (0.3,0.4)
+        pos = jnp.array([[4, 4, 4]], jnp.int32)
+        lr = self.env.reward_module.log_reward(pos, params.reward_params, 5)
+        np.testing.assert_allclose(float(lr[0]), np.log(1e-1 + 0.5),
+                                   rtol=1e-5)
+
+    def test_true_distribution_sums_to_one(self):
+        p = self.env.true_distribution(self.params)
+        np.testing.assert_allclose(float(jnp.sum(p)), 1.0, rtol=1e-5)
+        assert p.shape == (5 ** 3,)
+
+    def test_step_noop_after_terminal(self):
+        env, params = self.env, self.params
+        obs, state = env.reset(1, params)
+        stop = jnp.array([env.action_dim - 1], jnp.int32)
+        _, s1, lr1, _, _ = env.step(state, stop, params)
+        _, s2, lr2, _, _ = env.step(s1, jnp.array([0], jnp.int32), params)
+        assert tree_allclose(s1.pos, s2.pos)
+        assert float(lr2[0]) == 0.0          # reward emitted exactly once
+
+
+# ---------------------------------------------------------------------------
+# BitSeq
+# ---------------------------------------------------------------------------
+
+class TestBitSeq:
+    def setup_method(self):
+        self.env = repro.BitSeqEnvironment(n=16, k=4)
+        self.params = self.env.init(KEY)
+
+    def test_trajectory_fills_sequence(self):
+        env, params = self.env, self.params
+        obs, state = env.reset(1, params)
+        for pos in range(env.L):
+            a = jnp.array([pos * env.m + 3], jnp.int32)
+            _, state, lr, done, _ = env.step(state, a, params)
+        assert bool(done[0])
+        assert int(jnp.sum(state.tokens == env.empty)) == 0
+
+    def test_reward_zero_distance_at_mode(self):
+        env, params = self.env, self.params
+        words = params.mode_words[:1]
+        state = env.terminal_state_from_words(words)
+        lr = env.log_reward(state, params)
+        np.testing.assert_allclose(float(lr[0]), 0.0, atol=1e-6)
+
+    def test_reward_hamming_monotone(self):
+        env, params = self.env, self.params
+        w = np.asarray(params.mode_words[0]).copy()
+        w[0] ^= 1  # flip one bit of the first word
+        state = env.terminal_state_from_words(jnp.asarray(w)[None])
+        lr = env.log_reward(state, params)
+        np.testing.assert_allclose(float(lr[0]), -env.beta * 1 / env.n,
+                                   rtol=1e-5)
+
+    def test_backward_inverts_forward(self):
+        env, params = self.env, self.params
+        obs, state = env.reset(1, params)
+        a = jnp.array([2 * env.m + 7], jnp.int32)
+        _, ns, _, _, _ = env.step(state, a, params)
+        ba = env.get_backward_action(state, a, ns, params)
+        assert int(ba[0]) == 2
+        _, prev, _, _, _ = env.backward_step(ns, ba, params)
+        assert tree_allclose(state, prev)
+        fa = env.get_forward_action(ns, ba, prev, params)
+        assert int(fa[0]) == int(a[0])
+
+    def test_forward_mask_only_empty_positions(self):
+        env, params = self.env, self.params
+        obs, state = env.reset(1, params)
+        a = jnp.array([0 * env.m + 5], jnp.int32)
+        _, state, _, _, _ = env.step(state, a, params)
+        mask = env.forward_mask(state, params).reshape(env.L, env.m)
+        assert not bool(mask[0].any())
+        assert bool(mask[1].all())
+
+
+# ---------------------------------------------------------------------------
+# TFBind8 / QM9 / AMP
+# ---------------------------------------------------------------------------
+
+class TestSequences:
+    def test_tfbind8_full_trajectory(self):
+        env = repro.TFBind8Environment()
+        params = env.init(KEY)
+        obs, state = env.reset(2, params)
+        for t in range(8):
+            a = jnp.array([t % 4, (t + 1) % 4], jnp.int32)
+            _, state, lr, done, _ = env.step(state, a, params)
+        assert bool(done.all())
+        assert np.all(np.isfinite(np.asarray(lr)))
+
+    def test_tfbind8_reward_matches_table(self):
+        env = repro.TFBind8Environment()
+        params = env.init(KEY)
+        toks = jnp.array([[0, 1, 2, 3, 0, 1, 2, 3]], jnp.int32)
+        state = env.terminal_state_from_tokens(toks)
+        lr = env.log_reward(state, params)
+        idx = int(env.flatten_index(toks[0]))
+        expect = 10.0 * np.log(np.asarray(params["table"])[idx])
+        np.testing.assert_allclose(float(lr[0]), expect, rtol=1e-5)
+
+    def test_qm9_prepend_append(self):
+        env = repro.QM9Environment()
+        params = env.init(KEY)
+        obs, state = env.reset(1, params)
+        # append 3, prepend 7 -> sequence [7, 3]
+        _, state, _, _, _ = env.step(state, jnp.array([3], jnp.int32), params)
+        _, state, _, _, _ = env.step(state, jnp.array([11 + 7], jnp.int32),
+                                     params)
+        toks = env.tokens_left_aligned(state)
+        assert list(np.asarray(toks[0, :2])) == [7, 3]
+
+    def test_qm9_backward_inverts(self):
+        env = repro.QM9Environment()
+        params = env.init(KEY)
+        obs, state = env.reset(1, params)
+        for a in [3, 11 + 7, 5]:
+            aa = jnp.array([a], jnp.int32)
+            _, ns, _, _, _ = env.step(state, aa, params)
+            ba = env.get_backward_action(state, aa, ns, params)
+            _, prev, _, _, _ = env.backward_step(ns, ba, params)
+            assert tree_allclose(env.tokens_left_aligned(state),
+                                 env.tokens_left_aligned(prev))
+            fa = env.get_forward_action(ns, ba, prev, params)
+            assert int(fa[0]) == a
+            state = ns
+
+    def test_amp_stop_and_variable_length(self):
+        env = repro.AMPEnvironment(max_len=10)
+        params = env.init(KEY)
+        obs, state = env.reset(1, params)
+        for a in [4, 5, 6]:
+            _, state, _, _, _ = env.step(state, jnp.array([a], jnp.int32),
+                                         params)
+        _, state, lr, done, _ = env.step(
+            state, jnp.array([env.stop_action], jnp.int32), params)
+        assert bool(done[0]) and int(state.length[0]) == 3
+        assert float(lr[0]) != 0.0
+
+    def test_amp_mask_forces_stop_at_max_len(self):
+        env = repro.AMPEnvironment(max_len=3)
+        params = env.init(KEY)
+        obs, state = env.reset(1, params)
+        for a in [0, 1, 2]:
+            _, state, _, _, _ = env.step(state, jnp.array([a], jnp.int32),
+                                         params)
+        mask = env.forward_mask(state, params)
+        assert not bool(mask[0, :env.vocab].any())
+        assert bool(mask[0, env.stop_action])
+
+
+# ---------------------------------------------------------------------------
+# DAG
+# ---------------------------------------------------------------------------
+
+class TestDAG:
+    def setup_method(self):
+        self.env = repro.DAGEnvironment(d=4)
+        self.params = self.env.init(KEY)
+
+    def test_acyclicity_mask(self):
+        env, params = self.env, self.params
+        obs, state = env.reset(1, params)
+        d = env.d
+        # add 0->1 then 1->2; then 2->0 must be masked (cycle)
+        for (u, v) in [(0, 1), (1, 2)]:
+            a = jnp.array([u * d + v], jnp.int32)
+            _, state, _, _, _ = env.step(state, a, params)
+        mask = env.forward_mask(state, params)
+        assert not bool(mask[0, 2 * d + 0])
+        assert not bool(mask[0, 1 * d + 0])
+        assert not bool(mask[0, 0 * d + 1])   # existing edge
+        assert not bool(mask[0, 0 * d + 0])   # self loop
+        assert bool(mask[0, 0 * d + 2])
+
+    def test_incremental_score_matches_table(self):
+        env, params = self.env, self.params
+        d = env.d
+        obs, state = env.reset(1, params)
+        for (u, v) in [(0, 1), (2, 1), (1, 3)]:
+            a = jnp.array([u * d + v], jnp.int32)
+            _, state, _, _, _ = env.step(state, a, params)
+        table = np.asarray(params["table"])
+        # recompute from scratch: parents 1 <- {0, 2}; 3 <- {1}
+        expect = (table[0, 0] + table[1, 0b0101] + table[2, 0]
+                  + table[3, 0b0010])
+        np.testing.assert_allclose(float(state.log_r[0]), expect, rtol=1e-5)
+
+    def test_backward_removal_restores_score_and_reach(self):
+        env, params = self.env, self.params
+        d = env.d
+        obs, state = env.reset(1, params)
+        a = jnp.array([0 * d + 1], jnp.int32)
+        _, s1, _, _, _ = env.step(state, a, params)
+        _, s2, _, _, _ = env.step(s1, jnp.array([1 * d + 2], jnp.int32),
+                                  params)
+        _, back, _, _, _ = env.backward_step(s2, jnp.array([1 * d + 2],
+                                                           jnp.int32), params)
+        assert tree_allclose(s1.adj, back.adj)
+        assert tree_allclose(s1.reach, back.reach)
+        np.testing.assert_allclose(float(back.log_r[0]), float(s1.log_r[0]),
+                                   rtol=1e-5)
+
+    def test_bge_score_equivalence(self):
+        """BGe gives identical scores to Markov-equivalent DAGs: X->Y vs
+        Y->X (they encode the same independencies)."""
+        from repro.rewards.bayesnet import (bge_score_table,
+                                            sample_linear_gaussian_data)
+        rng = np.random.RandomState(0)
+        adj = np.zeros((2, 2), np.int8)
+        adj[0, 1] = 1
+        X = sample_linear_gaussian_data(rng, adj, 60)
+        table = bge_score_table(X)
+        s_xy = table[0, 0b00] + table[1, 0b01]
+        s_yx = table[1, 0b00] + table[0, 0b10]
+        np.testing.assert_allclose(s_xy, s_yx, rtol=1e-8)
+
+    def test_enumeration_counts(self):
+        from repro.rewards.bayesnet import enumerate_dags
+        assert enumerate_dags(2).shape[0] == 3
+        assert enumerate_dags(3).shape[0] == 25
+        assert enumerate_dags(4).shape[0] == 543
+
+
+# ---------------------------------------------------------------------------
+# Ising
+# ---------------------------------------------------------------------------
+
+class TestIsing:
+    def setup_method(self):
+        self.env = repro.IsingEnvironment(n=3, sigma=0.2)
+        self.params = self.env.init(KEY)
+
+    def test_energy_quadratic_form(self):
+        env, params = self.env, self.params
+        spins = jnp.ones((1, env.D), jnp.int8)
+        state = env.terminal_state_from_spins(spins)
+        lr = env.log_reward(state, params)
+        # all-up config on toroidal lattice: x^T J x = sigma * 4 * D
+        np.testing.assert_allclose(float(lr[0]), 0.2 * 4 * env.D, rtol=1e-5)
+
+    def test_action_encoding_roundtrip(self):
+        env, params = self.env, self.params
+        obs, state = env.reset(1, params)
+        a = jnp.array([2 * 5 + 1], jnp.int32)   # site 5, spin +1
+        _, ns, _, _, _ = env.step(state, a, params)
+        assert int(ns.spins[0, 5]) == 1
+        ba = env.get_backward_action(state, a, ns, params)
+        assert int(ba[0]) == 5
+        _, prev, _, _, _ = env.backward_step(ns, ba, params)
+        assert tree_allclose(state, prev)
+        fa = env.get_forward_action(ns, ba, prev, params)
+        assert int(fa[0]) == int(a[0])
+
+    def test_wolff_sampler_magnetized(self):
+        """Strong ferromagnetic coupling -> |magnetization| near 1."""
+        from repro.envs.ising import generate_ising_dataset
+        X = generate_ising_dataset(0, n=4, sigma=0.5, num_samples=50)
+        mag = np.abs(X.mean(1)).mean()
+        assert mag > 0.8
+
+
+# ---------------------------------------------------------------------------
+# Phylo
+# ---------------------------------------------------------------------------
+
+class TestPhylo:
+    def setup_method(self):
+        self.env = PhyloEnvironment(n_species=5, n_sites=30, alpha=4.0,
+                                    reward_c=20.0)
+        self.params = self.env.init(KEY)
+
+    def test_full_episode_builds_tree(self):
+        env, params = self.env, self.params
+        obs, state = env.reset(1, params)
+        for _ in range(env.n - 1):
+            mask = env.forward_mask(state, params)
+            a = jnp.argmax(mask, axis=-1).astype(jnp.int32)
+            _, state, lr, done, _ = env.step(state, a, params)
+        assert bool(done[0])
+        assert int(jnp.sum(state.root_mask[0])) == 1
+
+    def test_fitch_score_brute_force(self):
+        """Incremental Fitch equals brute-force small-parsimony on a fixed
+        tree shape for random leaf sequences."""
+        env, params = self.env, self.params
+        obs, state = env.reset(1, params)
+        # caterpillar merge order: (0,1), (new,2), (new,3), (new,4)
+        leaf = np.asarray(params["leaf_fitch"])  # (n, S) bitmasks
+
+        def fitch_pair(a, b):
+            inter = a & b
+            mut = (inter == 0)
+            return np.where(mut, a | b, inter), mut.sum()
+
+        f01, m1 = fitch_pair(leaf[0], leaf[1])
+        f2, m2 = fitch_pair(f01, leaf[2])
+        f3, m3 = fitch_pair(f2, leaf[3])
+        f4, m4 = fitch_pair(f3, leaf[4])
+        expect = m1 + m2 + m3 + m4
+
+        pi = np.asarray(self.env.pair_index)
+        merges = [(0, 1)]
+        a = jnp.array([pi[0, 1]], jnp.int32)
+        _, state, _, _, _ = env.step(state, a, params)
+        new = env.n  # first internal slot
+        for leaf_idx in (2, 3, 4):
+            a = jnp.array([pi[new, leaf_idx]], jnp.int32)
+            _, state, _, _, _ = env.step(state, a, params)
+            new += 1
+        np.testing.assert_allclose(float(state.score[0]), expect)
+
+    def test_energy_shaping_endpoints(self):
+        env, params = self.env, self.params
+        obs, state = env.reset(1, params)
+        np.testing.assert_allclose(float(env.energy(state, params)[0]), 0.0)
+        for _ in range(env.n - 1):
+            mask = env.forward_mask(state, params)
+            a = jnp.argmax(mask, axis=-1).astype(jnp.int32)
+            _, state, _, _, _ = env.step(state, a, params)
+        e = float(env.energy(state, params)[0])
+        lr = float(env.log_reward(state, params)[0])
+        np.testing.assert_allclose(e, -lr, rtol=1e-5)
+
+    def test_backward_split_inverts_merge(self):
+        env, params = self.env, self.params
+        obs, state = env.reset(1, params)
+        pi = np.asarray(self.env.pair_index)
+        a = jnp.array([pi[1, 3]], jnp.int32)
+        _, ns, _, _, _ = env.step(state, a, params)
+        ba = env.get_backward_action(state, a, ns, params)
+        assert int(ba[0]) == env.n
+        _, prev, _, _, _ = env.backward_step(ns, ba, params)
+        assert tree_allclose(state, prev)
+        fa = env.get_forward_action(ns, ba, prev, params)
+        assert int(fa[0]) == int(a[0])

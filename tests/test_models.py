@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests (assignment (f)): reduced config of the same
+family, one forward/train step on CPU, output shapes + no NaNs; plus
+decode/train consistency and scan/unroll equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch import steps as steps_mod
+from repro.models import lm as LM
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def make_batch(cfg, key=KEY, batch=B, seq=S):
+    b = {"tokens": jax.random.randint(key, (batch, seq), 0,
+                                      cfg.vocab_size),
+         "targets": jax.random.randint(key, (batch, seq), 0,
+                                       cfg.vocab_size),
+         "mask": jnp.ones((batch, seq), jnp.float32),
+         "log_reward": jnp.zeros((batch,), jnp.float32)}
+    if cfg.family == "vlm":
+        b["embeds"] = jax.random.normal(key, (batch, seq, cfg.d_model),
+                                        jnp.bfloat16)
+        b["position_ids"] = jnp.broadcast_to(
+            jnp.arange(seq)[None, None], (3, batch, seq)).astype(jnp.int32)
+        del b["tokens"]
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(key, (batch, seq, cfg.d_model),
+                                        jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = steps_mod.init_lm_params(KEY, cfg)
+    batch = make_batch(cfg)
+    lp, aux = LM.forward_train(params["model"], cfg, batch, attn_chunk=8)
+    assert lp.shape == (B, S)
+    assert np.all(np.isfinite(np.asarray(lp, np.float32)))
+    # one optimizer step moves the loss
+    tcfg = steps_mod.LMTrainConfig(lr=1e-3)
+    train_step, tx = steps_mod.make_train_step(cfg, tcfg)
+    opt_state = tx.init(params)
+    p2, o2, metrics = jax.jit(train_step)(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    leaves = jax.tree_util.tree_leaves(p2)
+    assert all(np.all(np.isfinite(np.asarray(x, np.float32)))
+               for x in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = LM.init_params(KEY, cfg)
+    cache = LM.init_cache(cfg, B, 32)
+    kw = {}
+    if cfg.family == "encdec":
+        frames = jax.random.normal(KEY, (B, 8, cfg.d_model), jnp.bfloat16)
+        cache["cross"] = LM.build_cross_cache(params, cfg, frames,
+                                              attn_chunk=8)
+    if cfg.family == "vlm":
+        kw = dict(embeds=jax.random.normal(KEY, (B, 1, cfg.d_model),
+                                           jnp.bfloat16),
+                  position_ids=jnp.zeros((3, B, 1), jnp.int32))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = LM.decode_step(params, cfg, tok, cache,
+                                       attn_chunk=8, **kw)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert int(cache["index"]) == 3
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "rwkv6-1.6b",
+                                  "hymba-1.5b", "qwen3-moe-30b-a3b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Step-by-step decode log-probs == training-mode log-probs."""
+    cfg = get_config(arch, smoke=True)
+    params = LM.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (B, 8), 0, cfg.vocab_size)
+    lp, _ = LM.forward_train(params, cfg,
+                             {"tokens": toks,
+                              "targets": jnp.roll(toks, -1, 1)},
+                             attn_chunk=8)
+    cache = LM.init_cache(cfg, B, 16)
+    errs = []
+    for t in range(7):
+        logits, cache = LM.decode_step(params, cfg, toks[:, t:t + 1],
+                                       cache, attn_chunk=8)
+        lsm = jax.nn.log_softmax(logits, -1)
+        step_lp = jnp.take_along_axis(lsm, toks[:, t + 1:t + 2], -1)[:, 0]
+        errs.append(jnp.abs(step_lp - lp[:, t].astype(jnp.float32)))
+    err = float(jnp.max(jnp.stack(errs)))
+    assert err < 0.05, err
+
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "rwkv6-1.6b",
+                                  "qwen2-moe-a2.7b", "whisper-medium"])
+def test_scan_equals_unroll(arch):
+    """scan_layers=True and the unrolled calibration path are numerically
+    identical programs."""
+    cfg = get_config(arch, smoke=True)
+    params = LM.init_params(KEY, cfg)
+    batch = make_batch(cfg)
+    lp1, _ = LM.forward_train(params, cfg, batch, attn_chunk=8)
+    cfg2 = dataclasses.replace(cfg, scan_layers=False)
+    lp2, _ = LM.forward_train(params, cfg2, batch, attn_chunk=8)
+    # bf16 params: scan and unroll differ only in accumulation order
+    np.testing.assert_allclose(np.asarray(lp1, np.float32),
+                               np.asarray(lp2, np.float32), atol=7e-3)
+
+
+def test_param_count_analytic_matches_actual():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, smoke=True)
+        params = LM.init_params(KEY, cfg)
+        actual = sum(int(x.size) for x in
+                     jax.tree_util.tree_leaves(params))
+        analytic = cfg.param_count()
+        # analytic formula ignores small vectors (norms, biases, loras)
+        assert abs(actual - analytic) / actual < 0.25, \
+            (arch, actual, analytic)
+
+
+def test_moe_padding_masks_pad_experts():
+    from repro.models.moe import _router_probs, padded_num_experts
+    cfg = get_config("qwen2-moe-a2.7b", smoke=True)
+    # smoke config has 6 experts -> padded to 16
+    assert padded_num_experts(cfg) == 16
+    p = {"router": jax.random.normal(KEY, (cfg.d_model,
+                                           padded_num_experts(cfg)))}
+    probs = _router_probs(p, jax.random.normal(KEY, (5, cfg.d_model)), cfg)
+    np.testing.assert_allclose(
+        np.asarray(probs[:, cfg.num_experts:]), 0.0, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_mrope_equals_rope_for_temporal_positions():
+    """M-RoPE with t == h == w positions reduces to standard RoPE."""
+    from repro.models.layers import apply_mrope, apply_rope
+    x = jax.random.normal(KEY, (2, 8, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+    a = apply_rope(x, pos, 1e4)
+    b = apply_mrope(x, pos3, 1e4, (2, 3, 3))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
