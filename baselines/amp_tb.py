@@ -1,18 +1,11 @@
-"""Single-file TB baseline on AMP peptide design (paper §B.2.2).
+"""TB baseline on AMP peptide design — thin wrapper over the ``amp_tb``
+recipe (paper §B.2.2; see src/repro/recipes/seqs.py).
 
   PYTHONPATH=src python baselines/amp_tb.py
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-import repro
-from repro.core.policies import make_transformer_policy
-from repro.core.rollout import forward_rollout
-from repro.core.trainer import GFNConfig, init_train_state, make_train_step
-from repro.metrics.distributions import topk_reward_and_diversity
+from repro.run import run_recipe
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -21,30 +14,5 @@ if __name__ == "__main__":
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-
-    env = repro.AMPEnvironment(max_len=args.max_len)
-    params = env.init(jax.random.PRNGKey(args.seed))
-    policy = make_transformer_policy(env.vocab_size, args.max_len,
-                                     env.action_dim,
-                                     env.backward_action_dim,
-                                     num_layers=3, dim=64, num_heads=8,
-                                     init_log_z=150.0)   # paper init
-    cfg = GFNConfig(objective="tb", num_envs=16, lr=args.lr,
-                    log_z_lr=0.64, exploration_eps=1e-2,
-                    stop_action=env.stop_action)
-    step, tx = make_train_step(env, params, policy, cfg)
-    step = jax.jit(step)
-    ts = init_train_state(jax.random.PRNGKey(args.seed + 1), policy, tx)
-
-    t0 = time.time()
-    for it in range(args.iterations):
-        ts, (m, _) = step(ts)
-        if it % 500 == 0:
-            b = forward_rollout(jax.random.PRNGKey(2), env, params,
-                                policy.apply, ts.params, 256)
-            r, d = topk_reward_and_diversity(jnp.exp(b.log_reward),
-                                             b.obs[-1], k=100)
-            print(f"it {it:6d} loss {float(m['loss']):9.3f} "
-                  f"top100_R {float(r):.3f} div {float(d):.1f} "
-                  f"({it / max(time.time() - t0, 1e-9):.1f} it/s)",
-                  flush=True)
+    run_recipe("amp_tb", seed=args.seed, iterations=args.iterations,
+               env={"max_len": args.max_len}, config={"lr": args.lr})

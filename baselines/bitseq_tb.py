@@ -1,20 +1,11 @@
-"""Single-file TB baseline on Bit Sequences (paper §B.2, CleanRL-style).
+"""TB baseline on Bit Sequences — thin wrapper over the ``bitseq_tb`` recipe
+(paper §B.2; see src/repro/recipes/seqs.py).
 
   PYTHONPATH=src python baselines/bitseq_tb.py --n 120 --k 8
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-import repro
-from repro.core.policies import make_transformer_policy
-from repro.core.trainer import GFNConfig, init_train_state, make_train_step
-from repro.envs.bitseq import make_test_set
-from repro.metrics.distributions import (log_prob_mc_estimate,
-                                         pearson_correlation)
+from repro.run import run_recipe
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -25,35 +16,6 @@ if __name__ == "__main__":
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-
-    env = repro.BitSeqEnvironment(n=args.n, k=args.k, beta=3.0)
-    params = env.init(jax.random.PRNGKey(args.seed))
-    policy = make_transformer_policy(env.vocab_size, env.L, env.action_dim,
-                                     env.backward_action_dim, num_layers=3,
-                                     dim=64, num_heads=8)
-    cfg = GFNConfig(objective="tb", num_envs=args.num_envs, lr=args.lr,
-                    exploration_eps=1e-3)
-    step, tx = make_train_step(env, params, policy, cfg)
-    step = jax.jit(step)
-    ts = init_train_state(jax.random.PRNGKey(args.seed + 1), policy, tx)
-
-    modes = np.asarray(params.modes)
-    test = make_test_set(args.seed, modes)
-    sel = np.random.RandomState(0).choice(len(test), 128, replace=False)
-    pw = 2 ** np.arange(args.k - 1, -1, -1)
-    words = jnp.asarray((test[sel].reshape(-1, env.L, args.k) * pw).sum(-1),
-                        jnp.int32)
-    term = env.terminal_state_from_words(words)
-    log_r = env.log_reward_of_words(words, params)
-
-    t0 = time.time()
-    for it in range(args.iterations):
-        ts, (m, _) = step(ts)
-        if it % 1000 == 0:
-            lp = log_prob_mc_estimate(jax.random.PRNGKey(3), env, params,
-                                      policy.apply, ts.params, term, 10)
-            corr = float(pearson_correlation(lp, log_r))
-            print(f"it {it:6d} loss {float(m['loss']):9.3f} "
-                  f"corr {corr:.3f} "
-                  f"({it / max(time.time() - t0, 1e-9):.1f} it/s)",
-                  flush=True)
+    run_recipe("bitseq_tb", seed=args.seed, iterations=args.iterations,
+               num_envs=args.num_envs, env={"n": args.n, "k": args.k},
+               config={"lr": args.lr})

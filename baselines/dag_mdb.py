@@ -1,22 +1,11 @@
-"""Single-file MDB baseline: Bayesian-network structure learning
-(paper §B.4, CleanRL-style).
+"""MDB baseline: Bayesian-network structure learning — thin wrapper over the
+``dag_mdb`` recipe (paper §B.4; see src/repro/recipes/dag.py).
 
   PYTHONPATH=src python baselines/dag_mdb.py --d 5 --score bge
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-import repro
-from repro.core.policies import make_mlp_policy
-from repro.core.rollout import forward_rollout
-from repro.core.trainer import GFNConfig, init_train_state, make_train_step
-from repro.metrics.distributions import jensen_shannon
-from repro.rewards.bayesnet import (BayesNetRewardModule, enumerate_dags,
-                                    exact_posterior)
+from repro.run import run_recipe
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -27,37 +16,7 @@ if __name__ == "__main__":
     ap.add_argument("--lr", type=float, default=1e-4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-
-    rm = BayesNetRewardModule(d=args.d, num_samples=100, score=args.score,
-                              seed=args.seed)
-    env = repro.DAGEnvironment(reward_module=rm, d=args.d)
-    params = env.init(jax.random.PRNGKey(args.seed))
-    dags = enumerate_dags(args.d)
-    post = exact_posterior(dags, np.asarray(params["table"]))
-    ids = {g.astype(np.int8).tobytes(): i for i, g in enumerate(dags)}
-
-    policy = make_mlp_policy(args.d ** 2, env.action_dim,
-                             env.backward_action_dim, hidden=(128, 128),
-                             learn_backward=True)
-    cfg = GFNConfig(objective="mdb", num_envs=args.batch, lr=args.lr,
-                    stop_action=env.stop_action, exploration_eps=1.0,
-                    exploration_anneal_steps=args.iterations // 2)
-    step, tx = make_train_step(env, params, policy, cfg)
-    step = jax.jit(step)
-    ts = init_train_state(jax.random.PRNGKey(args.seed + 1), policy, tx)
-
-    t0 = time.time()
-    for it in range(args.iterations):
-        ts, (m, _) = step(ts)
-        if it % 2000 == 0:
-            b = forward_rollout(jax.random.PRNGKey(9), env, params,
-                                policy.apply, ts.params, 4000)
-            adj = np.asarray(b.obs[-1]).reshape(-1, args.d, args.d)
-            counts = np.zeros(len(dags))
-            for a in adj.astype(np.int8):
-                counts[ids[a.tobytes()]] += 1
-            emp = counts / counts.sum()
-            jsd = float(jensen_shannon(jnp.asarray(emp), jnp.asarray(post)))
-            print(f"it {it:6d} loss {float(m['loss']):.5f} JSD {jsd:.4f} "
-                  f"({it / max(time.time() - t0, 1e-9):.1f} it/s)",
-                  flush=True)
+    run_recipe("dag_mdb", seed=args.seed, iterations=args.iterations,
+               num_envs=args.batch,
+               env={"d": args.d, "score": args.score, "seed": args.seed},
+               config={"lr": args.lr})

@@ -1,19 +1,11 @@
-"""Single-file TB baseline on Hypergrid (paper §B.1, CleanRL-style).
+"""TB baseline on Hypergrid — thin wrapper over the ``hypergrid_tb`` recipe
+(paper §B.1; see src/repro/recipes/hypergrid.py).
 
   PYTHONPATH=src python baselines/hypergrid_tb.py --dim 4 --side 20
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-import repro
-from repro.core.policies import make_mlp_policy
-from repro.core.rollout import forward_rollout
-from repro.core.trainer import GFNConfig, init_train_state, make_train_step
-from repro.metrics.distributions import (empirical_distribution,
-                                         total_variation)
+from repro.run import run_recipe
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -25,32 +17,7 @@ if __name__ == "__main__":
     ap.add_argument("--z-lr", type=float, default=1e-1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-
-    env = repro.HypergridEnvironment(repro.HypergridRewardModule(),
-                                     dim=args.dim, side=args.side)
-    params = env.init(jax.random.PRNGKey(args.seed))
-    policy = make_mlp_policy(env.obs_dim, env.action_dim,
-                             env.backward_action_dim, hidden=(256, 256))
-    cfg = GFNConfig(objective="tb", num_envs=args.num_envs, lr=args.lr,
-                    log_z_lr=args.z_lr, stop_action=env.dim,
-                    exploration_eps=0.1,
-                    exploration_anneal_steps=args.iterations // 2)
-    step, tx = make_train_step(env, params, policy, cfg)
-    step = jax.jit(step)
-    ts = init_train_state(jax.random.PRNGKey(args.seed + 1), policy, tx)
-
-    t0 = time.time()
-    for it in range(args.iterations):
-        ts, (m, _) = step(ts)
-        if it % 1000 == 0:
-            b = forward_rollout(jax.random.PRNGKey(2), env, params,
-                                policy.apply, ts.params, 2000)
-            pos = jnp.argmax(
-                b.obs[-1].reshape(-1, args.dim, args.side), -1)
-            emp = empirical_distribution(env.flatten_index(pos),
-                                         args.side ** args.dim)
-            tv = total_variation(emp, env.true_distribution(params))
-            print(f"it {it:6d} loss {float(m['loss']):.4f} "
-                  f"logZ {float(m['log_z']):.3f} TV {float(tv):.3f} "
-                  f"({it / max(time.time() - t0, 1e-9):.1f} it/s)",
-                  flush=True)
+    run_recipe("hypergrid_tb", seed=args.seed, iterations=args.iterations,
+               num_envs=args.num_envs,
+               env={"dim": args.dim, "side": args.side},
+               config={"lr": args.lr, "log_z_lr": args.z_lr})

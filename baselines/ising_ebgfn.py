@@ -1,18 +1,11 @@
-"""Single-file EB-GFN baseline on the Ising model (paper §B.5).
+"""EB-GFN baseline on the Ising model — thin wrapper over the
+``ising_ebgfn`` recipe (paper §B.5; see src/repro/recipes/ising.py).
 
   PYTHONPATH=src python baselines/ising_ebgfn.py --n 9 --sigma -0.1
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-import repro
-from repro.core.ebgfn import make_ebgfn_step, neg_log_rmse
-from repro.core.policies import make_mlp_policy
-from repro.envs.ising import generate_ising_dataset
+from repro.run import run_recipe
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -23,30 +16,7 @@ if __name__ == "__main__":
     ap.add_argument("--num-data", type=int, default=2000)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-
-    env = repro.IsingEnvironment(n=args.n, sigma=args.sigma)
-    true_params = env.init(jax.random.PRNGKey(0))
-    print("generating MCMC dataset (Wolff / heat-bath PT)...", flush=True)
-    data = jnp.asarray(generate_ising_dataset(args.seed, args.n, args.sigma,
-                                              num_samples=args.num_data))
-    policy = make_mlp_policy(env.D, env.action_dim,
-                             env.backward_action_dim,
-                             hidden=(256, 256, 256, 256),
-                             learn_backward=True)
-    init_fn, step_fn = make_ebgfn_step(env, policy, num_envs=args.batch)
-    st = init_fn(jax.random.PRNGKey(args.seed), data)
-    step_fn = jax.jit(step_fn)
-
-    rng = np.random.RandomState(args.seed)
-    t0 = time.time()
-    for it in range(args.steps):
-        idx = rng.randint(0, data.shape[0], args.batch)
-        st, m = step_fn(st, data[idx])
-        if it % 500 == 0:
-            score = float(neg_log_rmse(st.ebm_params["J"],
-                                       true_params["J"]))
-            print(f"it {it:6d} gfn_loss {float(m['gfn_loss']):9.3f} "
-                  f"-logRMSE {score:.3f} "
-                  f"mh_accept {float(m['mh_accept']):.2f} "
-                  f"({it / max(time.time() - t0, 1e-9):.1f} it/s)",
-                  flush=True)
+    run_recipe("ising_ebgfn", seed=args.seed, iterations=args.steps,
+               num_envs=args.batch,
+               env={"n": args.n, "sigma": args.sigma,
+                    "num_data": args.num_data})

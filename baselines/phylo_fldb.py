@@ -1,15 +1,11 @@
-"""Single-file FLDB baseline: phylogenetic tree generation (paper §B.3).
+"""FLDB baseline: phylogenetic tree generation — thin wrapper over the
+``phylo_fldb`` recipe (paper §B.3; see src/repro/recipes/phylo.py).
 
   PYTHONPATH=src python baselines/phylo_fldb.py --ds 1
 """
 import argparse
-import time
 
-import jax
-
-from repro.core.policies import make_phylo_policy
-from repro.core.trainer import GFNConfig, init_train_state, make_train_step
-from repro.envs.phylo import PhyloEnvironment
+from repro.run import run_recipe
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -21,27 +17,8 @@ if __name__ == "__main__":
     ap.add_argument("--reduced", action="store_true",
                     help="small synthetic alignment for CPU smoke runs")
     args = ap.parse_args()
-
-    if args.reduced:
-        env = PhyloEnvironment(n_species=10, n_sites=100, alpha=4.0,
-                               reward_c=100.0, seed=args.seed)
-    else:
-        env = PhyloEnvironment.from_dataset(args.ds, seed=args.seed)
-    params = env.init(jax.random.PRNGKey(args.seed))
-    policy = make_phylo_policy(env, num_layers=6, dim=32, num_heads=8,
-                               embed_dim=128)
-    cfg = GFNConfig(objective="fldb", num_envs=args.batch, lr=args.lr,
-                    exploration_eps=1.0,
-                    exploration_anneal_steps=args.iterations // 2)
-    step, tx = make_train_step(env, params, policy, cfg)
-    step = jax.jit(step)
-    ts = init_train_state(jax.random.PRNGKey(args.seed + 1), policy, tx)
-
-    t0 = time.time()
-    for it in range(args.iterations):
-        ts, (m, batch) = step(ts)
-        if it % 500 == 0:
-            print(f"it {it:6d} loss {float(m['loss']):10.4f} "
-                  f"mean_logR {float(m['mean_log_reward']):9.2f} "
-                  f"({it / max(time.time() - t0, 1e-9):.1f} it/s)",
-                  flush=True)
+    run_recipe("phylo_fldb", seed=args.seed, iterations=args.iterations,
+               num_envs=args.batch,
+               env={"ds": args.ds, "reduced": args.reduced,
+                    "seed": args.seed},
+               config={"lr": args.lr})

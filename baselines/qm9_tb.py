@@ -1,19 +1,11 @@
-"""Single-file TB baseline on QM9 (paper §B.2.1, CleanRL-style).
+"""TB baseline on QM9 — thin wrapper over the ``qm9_tb`` recipe
+(paper §B.2.1; see src/repro/recipes/seqs.py).
 
   PYTHONPATH=src python baselines/qm9_tb.py
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-import repro
-from repro.core.policies import make_transformer_policy
-from repro.core.rollout import forward_rollout
-from repro.core.trainer import GFNConfig, init_train_state, make_train_step
-from repro.metrics.distributions import (empirical_distribution,
-                                         total_variation)
+from repro.run import run_recipe
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -22,29 +14,5 @@ if __name__ == "__main__":
     ap.add_argument("--z-lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-
-    env = repro.QM9Environment()
-    params = env.init(jax.random.PRNGKey(args.seed))
-    policy = make_transformer_policy(env.vocab_size, 5, env.action_dim,
-                                     env.backward_action_dim,
-                                     num_layers=2, dim=64)
-    cfg = GFNConfig(objective="tb", num_envs=16, lr=args.lr,
-                    log_z_lr=args.z_lr, exploration_eps=1.0,
-                    exploration_anneal_steps=50000)
-    step, tx = make_train_step(env, params, policy, cfg)
-    step = jax.jit(step)
-    ts = init_train_state(jax.random.PRNGKey(args.seed + 1), policy, tx)
-    true = jax.nn.softmax(env.reward_module.true_log_rewards(params))
-
-    t0 = time.time()
-    for it in range(args.iterations):
-        ts, (m, _) = step(ts)
-        if it % 2000 == 0:
-            b = forward_rollout(jax.random.PRNGKey(2), env, params,
-                                policy.apply, ts.params, 4000)
-            emp = empirical_distribution(env.flatten_index(b.obs[-1]),
-                                         11 ** 5)
-            tv = float(total_variation(emp, true))
-            print(f"it {it:6d} loss {float(m['loss']):.4f} TV {tv:.4f} "
-                  f"({it / max(time.time() - t0, 1e-9):.1f} it/s)",
-                  flush=True)
+    run_recipe("qm9_tb", seed=args.seed, iterations=args.iterations,
+               config={"lr": args.lr, "log_z_lr": args.z_lr})

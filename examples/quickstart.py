@@ -71,3 +71,23 @@ ts, history = train(jax.random.PRNGKey(2), env, params, policy, cfg,
                     callback_every=500)
 assert history[-1] < 0.15, "training failed to converge"
 print("Converged. Final TV:", history[-1])
+
+# --- Composable API: samplers + recipes ------------------------------------
+# The same scenario as one fully-compiled off-policy run: a TrainLoop with a
+# replay sampler (FIFO of terminal states, replayed through the uniform
+# backward policy) fused into a single lax.scan program.
+from repro.algo import ReplaySampler, TrainLoop
+
+loop = TrainLoop(env, params, policy, cfg,
+                 sampler=ReplaySampler(capacity=1024, prioritized=True))
+state, (metrics, _) = loop.run(jax.random.PRNGKey(3), 500, mode="scan")
+print("Replay-sampler scan run, final loss:",
+      float(metrics["loss"][-1]))
+
+# Every paper benchmark is also a registered recipe — one call trains it and
+# reports its eval metric (same entry point as `python -m repro.run`):
+from repro.run import run_recipe
+
+out = run_recipe("hypergrid_tb", iterations=200, eval_every=100,
+                 env={"dim": 2, "side": 8})
+print("Recipe run final eval:", out["history"][-1])

@@ -21,8 +21,10 @@ from .rewards.hypergrid import (EasyHypergridRewardModule,
 from .core.rollout import backward_rollout, forward_rollout
 from .core.trainer import (GFNConfig, train, train_compiled,
                            train_vectorized)
+from .algo import (BackwardReplaySampler, EpsilonNoisySampler,
+                   OnPolicySampler, ReplaySampler, Sampler, TrainLoop)
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
 
 __all__ = [
     "Environment", "HypergridEnvironment", "BitSeqEnvironment",
@@ -31,4 +33,6 @@ __all__ = [
     "EasyHypergridRewardModule", "HypergridRewardModule",
     "forward_rollout", "backward_rollout",
     "GFNConfig", "train", "train_compiled", "train_vectorized",
+    "Sampler", "OnPolicySampler", "EpsilonNoisySampler", "ReplaySampler",
+    "BackwardReplaySampler", "TrainLoop",
 ]

@@ -1,0 +1,16 @@
+"""Composable GFlowNet training algorithms: pluggable samplers + TrainLoop.
+
+``TrainLoop`` runs one uniform step (sample -> objective -> update) in three
+execution modes; ``Sampler`` implementations decide where trajectories come
+from (on-policy, epsilon-noisy, replay, backward replay) and all compose
+with the fully-compiled ``lax.scan`` path.
+"""
+from .loop import LoopState, TrainLoop, make_sampler_train_step
+from .samplers import (SAMPLERS, BackwardReplaySampler, EpsilonNoisySampler,
+                       OnPolicySampler, ReplaySampler, Sampler, make_sampler)
+
+__all__ = [
+    "Sampler", "OnPolicySampler", "EpsilonNoisySampler", "ReplaySampler",
+    "BackwardReplaySampler", "SAMPLERS", "make_sampler",
+    "TrainLoop", "LoopState", "make_sampler_train_step",
+]

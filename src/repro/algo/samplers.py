@@ -1,0 +1,212 @@
+"""Pluggable trajectory samplers — the data-generation half of a GFlowNet
+training algorithm.
+
+The seed trainer hard-wired one execution path (on-policy forward rollout ->
+objective -> Adam).  A :class:`Sampler` decouples *where trajectories come
+from* from *how they are scored*, so replay-buffer and backward-trajectory
+training regimes (Shen et al. 2023; torchgfn's sampler/objective split)
+compose with every objective and with the fully-compiled ``lax.scan`` loop.
+
+Contract
+--------
+``sampler.build(env, env_params, policy_apply, cfg)`` returns a pair
+``(init_fn, sample_fn)`` of *pure* functions:
+
+    init_fn() -> SamplerState
+        Constructs the sampler's carried state (an arbitrary fixed-shape
+        pytree; ``()`` for stateless samplers).  Called once, outside jit.
+
+    sample_fn(state, key, policy_params, step) -> (SamplerState, RolloutBatch)
+        Produces one training batch.  Must be jit- and ``lax.scan``-safe:
+        fixed shapes, no host round-trips, state threaded through the scan
+        carry.  ``step`` is the global iteration counter (a traced int32
+        scalar) for schedules such as epsilon annealing.
+
+Every objective re-evaluates the policy on the batch's stored observations
+(teacher forcing), so batches from any sampler — on-policy, noisy, replayed,
+or backward-reconstructed — flow through the identical loss code.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..buffer.fifo import FIFOBuffer
+from ..core.rollout import (backward_rollout, concat_rollout_batches,
+                            forward_rollout)
+from ..core.trainer import GFNConfig, current_eps
+
+SamplerState = Any
+SampleFn = Callable[[SamplerState, jax.Array, Any, jax.Array],
+                    Tuple[SamplerState, Any]]
+InitFn = Callable[[], SamplerState]
+
+
+class Sampler(abc.ABC):
+    """Base class for pluggable trajectory sources (see module docstring)."""
+
+    #: registry key / CLI name, set on subclasses
+    name: str = "base"
+
+    @abc.abstractmethod
+    def build(self, env, env_params, policy_apply,
+              cfg: GFNConfig) -> Tuple[InitFn, SampleFn]:
+        ...
+
+
+class OnPolicySampler(Sampler):
+    """Fresh forward rollouts from the current policy (the seed trainer's
+    behavior, including the config's epsilon-exploration schedule).
+
+    Stateless: ``SamplerState`` is ``()``.
+    """
+    name = "on_policy"
+
+    def __init__(self, num_envs: Optional[int] = None):
+        self.num_envs = num_envs
+
+    def build(self, env, env_params, policy_apply, cfg: GFNConfig):
+        B = self.num_envs or cfg.num_envs
+
+        def init_fn():
+            return ()
+
+        def sample_fn(state, key, policy_params, step):
+            eps = current_eps(cfg, step)
+            batch = forward_rollout(key, env, env_params, policy_apply,
+                                    policy_params, B, exploration_eps=eps)
+            return state, batch
+
+        return init_fn, sample_fn
+
+
+class EpsilonNoisySampler(Sampler):
+    """On-policy rollouts under an epsilon-uniform *behavior* policy with its
+    own (optionally annealed) schedule, independent of the config's.
+
+    The objectives score trajectories under the learned policy (not the
+    behavior distribution), so DB/TB/SubTB stay correct for any full-support
+    behavior — this sampler just controls how much off-policy exploration
+    noise the batch carries.
+    """
+    name = "eps_noisy"
+
+    def __init__(self, eps: float = 0.1, anneal_steps: int = 0,
+                 num_envs: Optional[int] = None):
+        self.eps = eps
+        self.anneal_steps = anneal_steps
+        self.num_envs = num_envs
+
+    def build(self, env, env_params, policy_apply, cfg: GFNConfig):
+        B = self.num_envs or cfg.num_envs
+
+        def init_fn():
+            return ()
+
+        def sample_fn(state, key, policy_params, step):
+            if self.anneal_steps > 0:
+                frac = jnp.clip(step.astype(jnp.float32) / self.anneal_steps,
+                                0.0, 1.0)
+                eps = self.eps * (1.0 - frac)
+            else:
+                eps = jnp.asarray(self.eps, jnp.float32)
+            batch = forward_rollout(key, env, env_params, policy_apply,
+                                    policy_params, B, exploration_eps=eps)
+            return state, batch
+
+        return init_fn, sample_fn
+
+
+class ReplaySampler(Sampler):
+    """FIFO replay of terminal states, reconstructed into trajectories with
+    the *uniform* backward policy.
+
+    Each step: (1) roll out ``cfg.num_envs`` fresh on-policy trajectories,
+    (2) push their terminal states + log-rewards into a :class:`FIFOBuffer`,
+    (3) draw ``replay_batch`` terminal states back out — uniformly, or
+    reward-prioritized (softmax over buffered log-rewards / ``temperature``)
+    — and (4) replay them through the collecting backward rollout, yielding
+    off-policy trajectories that are concatenated with the fresh batch.
+
+    Entirely ``jnp``: the buffer state rides the ``lax.scan`` carry, so the
+    fully-compiled training mode keeps zero host round-trips.
+    """
+    name = "replay"
+    #: which backward policy reconstructs trajectories from terminals
+    backward_policy = "uniform"
+
+    def __init__(self, capacity: int = 2048,
+                 replay_batch: Optional[int] = None,
+                 prioritized: bool = False, temperature: float = 1.0,
+                 num_envs: Optional[int] = None):
+        self.capacity = capacity
+        self.replay_batch = replay_batch
+        self.prioritized = prioritized
+        self.temperature = temperature
+        self.num_envs = num_envs
+
+    def build(self, env, env_params, policy_apply, cfg: GFNConfig):
+        B = self.num_envs or cfg.num_envs
+        R = self.replay_batch or B
+        buf = FIFOBuffer(self.capacity)
+
+        def init_fn():
+            _, state0 = env.reset(1, env_params)
+            proto = {"state": jax.tree_util.tree_map(lambda x: x[0], state0),
+                     "log_reward": jnp.zeros((), jnp.float32)}
+            return buf.init(proto)
+
+        def sample_fn(buf_state, key, policy_params, step):
+            k_roll, k_sel, k_replay = jax.random.split(key, 3)
+            eps = current_eps(cfg, step)
+            fresh, final_state = forward_rollout(
+                k_roll, env, env_params, policy_apply, policy_params, B,
+                exploration_eps=eps, return_final_state=True)
+            buf_state = buf.add_batch(
+                buf_state, {"state": final_state,
+                            "log_reward": fresh.log_reward})
+            if self.prioritized:
+                items = buf.sample_prioritized(
+                    buf_state, k_sel, R,
+                    priorities=buf_state.data["log_reward"],
+                    temperature=self.temperature)
+            else:
+                items = buf.sample(buf_state, k_sel, R)
+            replayed = backward_rollout(
+                k_replay, env, env_params, policy_apply, policy_params,
+                items["state"], collect=True,
+                backward_policy=self.backward_policy,
+                known_log_reward=items["log_reward"],
+                with_log_pf=False).batch
+            return buf_state, concat_rollout_batches(fresh, replayed)
+
+        return init_fn, sample_fn
+
+
+class BackwardReplaySampler(ReplaySampler):
+    """Replay buffered terminal states through :func:`backward_rollout` under
+    the policy's *learned* backward head (``logits_b``; uniform fallback when
+    the policy lacks one) — trajectories are drawn from P_B(tau | x), the
+    backward-trajectory training regime of Shen et al. (2023).
+    """
+    name = "backward_replay"
+    backward_policy = "learned"
+
+
+SAMPLERS: Dict[str, type] = {
+    cls.name: cls for cls in (OnPolicySampler, EpsilonNoisySampler,
+                              ReplaySampler, BackwardReplaySampler)
+}
+
+
+def make_sampler(spec, **kwargs) -> Sampler:
+    """Coerce a sampler spec (instance or registry name) into a Sampler."""
+    if isinstance(spec, Sampler):
+        return spec
+    if spec not in SAMPLERS:
+        raise KeyError(f"unknown sampler {spec!r}; "
+                       f"available: {sorted(SAMPLERS)}")
+    return SAMPLERS[spec](**kwargs)

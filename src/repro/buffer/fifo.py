@@ -31,6 +31,11 @@ class FIFOBuffer:
     def add_batch(self, state: BufferState, items: Any) -> BufferState:
         """items: pytree with leading batch dim B (B <= capacity)."""
         B = jax.tree_util.tree_leaves(items)[0].shape[0]
+        if B > self.capacity:
+            # duplicate scatter indices would leave unspecified winners
+            raise ValueError(
+                f"add_batch of {B} items exceeds buffer capacity "
+                f"{self.capacity}; grow the buffer or shrink the batch")
         idx = (state.insert_pos + jnp.arange(B)) % self.capacity
         data = jax.tree_util.tree_map(
             lambda buf, x: buf.at[idx].set(x), state.data, items)
@@ -42,6 +47,20 @@ class FIFOBuffer:
     def sample(self, state: BufferState, key: jax.Array, batch: int) -> Any:
         idx = jax.random.randint(key, (batch,), 0,
                                  jnp.maximum(state.size, 1))
+        return jax.tree_util.tree_map(lambda buf: buf[idx], state.data)
+
+    def sample_prioritized(self, state: BufferState, key: jax.Array,
+                           batch: int, priorities: jax.Array,
+                           temperature: float = 1.0) -> Any:
+        """Sample slots ~ softmax(priorities / temperature) over filled slots.
+
+        ``priorities`` is a (capacity,) array aligned with the buffer storage
+        (e.g. ``state.data["log_reward"]``); unfilled slots are excluded.
+        Reward-prioritized replay (Shen et al. 2023) passes log-rewards here.
+        """
+        filled = jnp.arange(self.capacity) < jnp.maximum(state.size, 1)
+        logits = jnp.where(filled, priorities / temperature, -jnp.inf)
+        idx = jax.random.categorical(key, logits, shape=(batch,))
         return jax.tree_util.tree_map(lambda buf: buf[idx], state.data)
 
     def valid_mask(self, state: BufferState) -> jax.Array:

@@ -74,69 +74,18 @@ def make_ebgfn_step(env: IsingEnvironment, policy, *, num_envs: int = 256,
         k1, k2, k3 = jax.random.split(key, 3)
         fwd = forward_rollout(k1, env, env_params, policy.apply, params,
                               num_envs)
-        # backward-from-data: rebuild a forward-ordered batch by rolling
-        # backward then replaying forward actions is equivalent to scoring
-        # the data trajectory; reuse forward_rollout on a "teacher" env is
-        # costlier — instead we directly build the batch from terminal
-        # states by backward sampling and flip it.
+        # backward-from-data: the collecting backward rollout materializes
+        # tau ~ P_B(.|x) from the data terminals as a forward RolloutBatch.
         data_term = env.terminal_state_from_spins(data_batch)
-        bwd = _backward_to_batch(k2, env, env_params, params, data_term)
+        bwd = backward_rollout(k2, env, env_params, policy.apply, params,
+                               data_term, collect=True,
+                               with_log_pf=False).batch
         take_fwd = jax.random.uniform(k3, (num_envs,)) < alpha
         batch = jax.tree_util.tree_map(
             lambda a, b: jnp.where(
                 take_fwd.reshape((1, num_envs) + (1,) * (a.ndim - 2))
                 if a.ndim >= 2 else take_fwd, a, b), fwd, bwd)
         return batch
-
-    def _backward_to_batch(key, env, env_params, params, terminal_state):
-        """Sample tau ~ P_B(.|x) and express it as a forward RolloutBatch."""
-        T = env.max_steps
-        B = terminal_state.steps.shape[0]
-
-        def step_fn(carry, key_t):
-            state = carry
-            at_init = env.is_initial(state, env_params)
-            bmask = env.backward_mask(state, env_params)
-            out = policy.apply(params, env.observe(state, env_params))
-            logits_b = out.get("logits_b")
-            if logits_b is None:
-                logits_b = jnp.zeros_like(bmask, jnp.float32)
-            from .types import sample_masked
-            safe = jnp.where(at_init[:, None], jnp.ones_like(bmask), bmask)
-            bwd_a, _ = sample_masked(key_t, logits_b, safe)
-            _, prev, _, _, _ = env.backward_step(state, bwd_a, env_params)
-            fwd_a = env.get_forward_action(state, bwd_a, prev, env_params)
-            ys = dict(obs=env.observe(prev, env_params),
-                      fwd_mask=env.forward_mask(prev, env_params),
-                      bwd_mask=bmask, actions=fwd_a, bwd_actions=bwd_a,
-                      live=jnp.logical_not(at_init))
-            return prev, ys
-
-        keys = jax.random.split(key, T)
-        state0, ys = jax.lax.scan(step_fn, terminal_state, keys)
-        # reverse time to forward order
-        rev = lambda x: jnp.flip(x, axis=0)
-        obs_f = env.observe(terminal_state, env_params)
-        fmask_f = env.forward_mask(terminal_state, env_params)
-        bmask_f = env.backward_mask(terminal_state, env_params)
-        cat_last = lambda a, b: jnp.concatenate([rev(a), b[None]], axis=0)
-        from .rollout import RolloutBatch
-        T_ = ys["actions"].shape[0]
-        done = jnp.concatenate(
-            [jnp.zeros((T_, B), bool),
-             jnp.ones((1, B), bool)], axis=0)
-        log_r = env.log_reward(terminal_state, env_params)
-        zeros_T1 = jnp.zeros((T_ + 1, B), jnp.float32)
-        return RolloutBatch(
-            obs=cat_last(ys["obs"], obs_f),
-            fwd_mask=cat_last(ys["fwd_mask"], fmask_f),
-            bwd_mask=cat_last(ys["bwd_mask"], bmask_f),
-            actions=rev(ys["actions"]),
-            bwd_actions=rev(ys["bwd_actions"]),
-            valid=rev(ys["live"]),
-            done=done, log_reward=log_r,
-            log_r_state=zeros_T1, energy=zeros_T1,
-            log_pf_beh=jnp.zeros((T_, B), jnp.float32))
 
     def ebm_step(key, ebm_params, ebm_opt, gfn_params, env_params, data):
         """Contrastive divergence with K = D (full regeneration) + MH."""

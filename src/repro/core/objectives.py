@@ -159,7 +159,34 @@ def mdb_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
     return jnp.sum(jnp.square(delta)) / n
 
 
+# ---------------------------------------------------------------------------
+# Registry — uniform signature
+# ---------------------------------------------------------------------------
+# Every registered objective takes (ev, batch, params, cfg); objective-
+# specific extras (log_z, subtb_lambda) are pulled from params/cfg inside the
+# adapter, so trainers dispatch by name with zero per-objective branching and
+# new objectives are one registry entry.
+
+def _tb(ev: TrajEval, batch: RolloutBatch, params, cfg) -> jax.Array:
+    return tb_loss(ev, batch, params["log_z"])
+
+
+def _db(ev: TrajEval, batch: RolloutBatch, params, cfg) -> jax.Array:
+    return db_loss(ev, batch)
+
+
+def _subtb(ev: TrajEval, batch: RolloutBatch, params, cfg) -> jax.Array:
+    return subtb_loss(ev, batch, cfg.subtb_lambda)
+
+
+def _fldb(ev: TrajEval, batch: RolloutBatch, params, cfg) -> jax.Array:
+    return fldb_loss(ev, batch)
+
+
+def _mdb(ev: TrajEval, batch: RolloutBatch, params, cfg) -> jax.Array:
+    return mdb_loss(ev, batch)
+
+
 OBJECTIVES = {
-    "tb": tb_loss, "db": db_loss, "subtb": subtb_loss,
-    "fldb": fldb_loss, "mdb": mdb_loss,
+    "tb": _tb, "db": _db, "subtb": _subtb, "fldb": _fldb, "mdb": _mdb,
 }

@@ -68,10 +68,23 @@ def _state_scalars(env: Environment, state, params):
     return lrs, en
 
 
+def concat_rollout_batches(a: RolloutBatch, b: RolloutBatch) -> RolloutBatch:
+    """Concatenate two time-major batches along the environment axis.
+
+    Used by replay samplers to mix fresh on-policy trajectories with
+    replayed ones; ``log_reward`` is the only (B,)-shaped field, everything
+    else carries time on axis 0 and batch on axis 1.
+    """
+    return jax.tree_util.tree_map(
+        lambda x, y: jnp.concatenate([x, y], axis=0 if x.ndim == 1 else 1),
+        a, b)
+
+
 def forward_rollout(key: jax.Array, env: Environment, env_params,
                     policy_apply: PolicyApply, policy_params,
                     num_envs: int, *, exploration_eps: jax.Array | float = 0.0,
-                    num_steps: Optional[int] = None) -> RolloutBatch:
+                    num_steps: Optional[int] = None,
+                    return_final_state: bool = False):
     T = num_steps if num_steps is not None else env.max_steps
     obs0, state0 = env.reset(num_envs, env_params)
 
@@ -108,7 +121,7 @@ def forward_rollout(key: jax.Array, env: Environment, env_params,
     lrs_f, en_f = _state_scalars(env, final_state, env_params)
 
     cat = lambda a, b: jnp.concatenate([a, b[None]], axis=0)
-    return RolloutBatch(
+    batch = RolloutBatch(
         obs=cat(ys["obs"], obs_f),
         fwd_mask=cat(ys["fwd_mask"], fmask_f),
         bwd_mask=cat(ys["bwd_mask"], bmask_f),
@@ -121,6 +134,9 @@ def forward_rollout(key: jax.Array, env: Environment, env_params,
         energy=cat(ys["energy"], en_f),
         log_pf_beh=ys["log_pf_beh"],
     )
+    if return_final_state:
+        return batch, final_state
+    return batch
 
 
 class BackwardRollout(NamedTuple):
@@ -132,13 +148,30 @@ class BackwardRollout(NamedTuple):
 def backward_rollout(key: jax.Array, env: Environment, env_params,
                      policy_apply: PolicyApply, policy_params,
                      terminal_state, *, collect: bool = False,
+                     backward_policy: str = "learned",
+                     known_log_reward: Optional[jax.Array] = None,
+                     with_log_pf: bool = True,
                      num_steps: Optional[int] = None) -> BackwardRollout:
     """Sample tau ~ P_B(.|x) from given terminal states; return log P_F(tau)
     and log P_B(tau|x) — the Monte-Carlo estimator of the paper's
     P_hat_theta(x) uses exactly these (paper §B.2).
 
-    Uses the learned backward head if the policy provides ``logits_b``,
-    otherwise the uniform backward policy.
+    ``backward_policy="learned"`` uses the policy's ``logits_b`` head when
+    present (uniform otherwise); ``"uniform"`` forces the uniform backward
+    policy regardless.
+
+    With ``collect=True`` the sampled trajectory is also materialized as a
+    forward-ordered :class:`RolloutBatch` (``.batch``), directly consumable
+    by every objective — this is how replay samplers turn buffered terminal
+    states into off-policy training data.  Trajectories shorter than
+    ``env.max_steps`` are left-padded with no-op transitions at the initial
+    state (``valid`` False there).  ``known_log_reward`` skips re-evaluating
+    the (possibly expensive, e.g. proxy-model) reward at the terminals.
+
+    ``with_log_pf=False`` skips the forward-policy evaluation entirely
+    (``log_pf``/``log_pf_beh`` come back as zeros) — replay samplers only
+    consume ``.batch`` and the objectives teacher-force the policy on it
+    anyway, so this halves the policy applies on the replay hot path.
     """
     T = num_steps if num_steps is not None else env.max_steps
 
@@ -147,23 +180,36 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
         at_init = env.is_initial(state, env_params)
         obs = env.observe(state, env_params)
         bmask = env.backward_mask(state, env_params)
-        out = policy_apply(policy_params, obs)
-        logits_b = out.get("logits_b")
-        if logits_b is None:
+        if backward_policy == "uniform":
             logits_b = jnp.zeros_like(bmask, jnp.float32)
+        else:
+            out = policy_apply(policy_params, obs)
+            logits_b = out.get("logits_b")
+            if logits_b is None:
+                logits_b = jnp.zeros_like(bmask, jnp.float32)
         safe_bmask = jnp.where(at_init[:, None], jnp.ones_like(bmask), bmask)
         bwd_a, log_pb = sample_masked(key_t, logits_b, safe_bmask)
         _, prev_state, _, _, _ = env.backward_step(state, bwd_a, env_params)
         fwd_a = env.get_forward_action(state, bwd_a, prev_state, env_params)
         prev_obs = env.observe(prev_state, env_params)
-        prev_out = policy_apply(policy_params, prev_obs)
         fmask_prev = env.forward_mask(prev_state, env_params)
-        logp_f_all = masked_logprobs(prev_out["logits"], fmask_prev)
-        log_pf = jnp.take_along_axis(logp_f_all, fwd_a[:, None], axis=-1)[:, 0]
         live = jnp.logical_not(at_init)
+        if with_log_pf:
+            prev_out = policy_apply(policy_params, prev_obs)
+            logp_f_all = masked_logprobs(prev_out["logits"], fmask_prev)
+            log_pf = jnp.take_along_axis(logp_f_all, fwd_a[:, None],
+                                         axis=-1)[:, 0]
+        else:
+            log_pf = jnp.zeros(fwd_a.shape, jnp.float32)
         acc_pf = acc_pf + jnp.where(live, log_pf, 0.0)
         acc_pb = acc_pb + jnp.where(live, log_pb, 0.0)
         ys = dict(obs=obs, bwd_a=bwd_a, fwd_a=fwd_a, live=live)
+        if collect:
+            lrs, en = _state_scalars(env, state, env_params)
+            ys.update(obs_prev=prev_obs, fmask_prev=fmask_prev, bmask=bmask,
+                      done=env.is_terminal(state, env_params),
+                      lrs=lrs, en=en,
+                      log_pf_t=jnp.where(live, log_pf, 0.0))
         return (prev_state, acc_pf, acc_pb), ys
 
     B = terminal_state.steps.shape[0]
@@ -171,4 +217,34 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
     keys = jax.random.split(key, T)
     (state0, log_pf, log_pb), ys = jax.lax.scan(
         step_fn, (terminal_state, zeros, zeros), keys)
-    return BackwardRollout(log_pf=log_pf, log_pb=log_pb, batch=None)
+    batch = None
+    if collect:
+        # scan step i visited forward-time state T-i; reversing the stacked
+        # outputs gives forward order.  obs/fwd_mask come from the *previous*
+        # state at each step (forward times 0..T-1) plus the terminal state;
+        # bwd_mask/done/state-scalars come from the *current* state (forward
+        # times 1..T) plus the initial carry-out ``state0``.
+        rev = lambda x: jnp.flip(x, axis=0)
+        cat_last = lambda a, b: jnp.concatenate([rev(a), b[None]], axis=0)
+        cat_first = lambda a, b: jnp.concatenate([a[None], rev(b)], axis=0)
+        obs_f = env.observe(terminal_state, env_params)
+        fmask_f = env.forward_mask(terminal_state, env_params)
+        lrs0, en0 = _state_scalars(env, state0, env_params)
+        if known_log_reward is not None:
+            log_r = known_log_reward
+        else:
+            log_r = env.log_reward(terminal_state, env_params)
+        batch = RolloutBatch(
+            obs=cat_last(ys["obs_prev"], obs_f),
+            fwd_mask=cat_last(ys["fmask_prev"], fmask_f),
+            bwd_mask=cat_first(env.backward_mask(state0, env_params),
+                               ys["bmask"]),
+            actions=rev(ys["fwd_a"]),
+            bwd_actions=rev(ys["bwd_a"]),
+            valid=rev(ys["live"]),
+            done=cat_first(env.is_terminal(state0, env_params), ys["done"]),
+            log_reward=log_r.astype(jnp.float32),
+            log_r_state=cat_first(lrs0, ys["lrs"]),
+            energy=cat_first(en0, ys["en"]),
+            log_pf_beh=rev(ys["log_pf_t"]))
+    return BackwardRollout(log_pf=log_pf, log_pb=log_pb, batch=batch)

@@ -1,16 +1,15 @@
-"""Compiled GFlowNet training loops.
+"""Compiled GFlowNet training — config, optimizer, loss, and back-compat
+entry points.
 
-``make_train_step`` builds one fully-jitted iteration:
-rollout -> objective -> grad -> optimizer update.  ``train`` runs it from
-python (per-iteration jit, torchgfn-comparable granularity) while
-``train_compiled`` fuses ``chunk`` iterations into a single ``lax.scan``
-program — the purejaxrl-style mode responsible for the paper's largest
-speedups.  ``train_vectorized`` vmaps whole training runs over seeds
-(the paper's "trainer vectorization" future-work item, implemented here).
+``make_train_step`` builds one fully-jitted on-policy iteration:
+rollout -> objective -> grad -> optimizer update.  The three seed drivers
+(``train`` / ``train_compiled`` / ``train_vectorized``) are preserved as thin
+aliases over :class:`repro.algo.TrainLoop` execution modes (``python`` /
+``scan`` / ``vmap_seeds``); new code should use ``TrainLoop`` directly, which
+additionally accepts pluggable samplers (replay, backward replay, ...).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -19,7 +18,7 @@ import jax.numpy as jnp
 from ..envs.base import Environment
 from ..optim import adamw as optim
 from .objectives import OBJECTIVES, evaluate_trajectory
-from .rollout import RolloutBatch, forward_rollout
+from .rollout import RolloutBatch
 from .types import TrainState
 
 
@@ -53,16 +52,15 @@ def make_optimizer(cfg: GFNConfig):
 
 
 def make_loss_fn(env: Environment, policy_apply, cfg: GFNConfig):
+    """Uniform loss over any registered objective: every entry in
+    ``OBJECTIVES`` takes ``(ev, batch, params, cfg)``, so there is no
+    per-objective dispatch here."""
     obj = OBJECTIVES[cfg.objective]
 
     def loss_fn(params, batch: RolloutBatch):
         ev = evaluate_trajectory(policy_apply, params, batch,
                                  stop_action=cfg.stop_action)
-        if cfg.objective == "tb":
-            return obj(ev, batch, params["log_z"])
-        if cfg.objective == "subtb":
-            return obj(ev, batch, cfg.subtb_lambda)
-        return obj(ev, batch)
+        return obj(ev, batch, params, cfg)
 
     return loss_fn
 
@@ -75,24 +73,27 @@ def current_eps(cfg: GFNConfig, step: jax.Array) -> jax.Array:
     return jnp.asarray(cfg.exploration_eps, jnp.float32)
 
 
-def make_train_step(env: Environment, env_params, policy, cfg: GFNConfig):
-    tx = make_optimizer(cfg)
-    loss_fn = make_loss_fn(env, policy.apply, cfg)
+def make_train_step(env: Environment, env_params, policy, cfg: GFNConfig,
+                    sampler=None):
+    """One jittable on-policy iteration over a ``TrainState`` carry.
+
+    This is the seed API (TrainState in, TrainState out), implemented as the
+    on-policy special case of :func:`repro.algo.make_sampler_train_step`.
+    Pass ``sampler`` only if its state is empty (``()``) — stateful samplers
+    need the ``LoopState`` carry of :class:`repro.algo.TrainLoop`.
+    """
+    from ..algo.loop import LoopState, make_sampler_train_step
+    from ..algo.samplers import OnPolicySampler
+    step_fn, tx, init_sampler = make_sampler_train_step(
+        env, env_params, policy, cfg, sampler or OnPolicySampler())
+    if init_sampler() != ():
+        raise ValueError(
+            "make_train_step only supports stateless samplers; use "
+            "repro.algo.TrainLoop for replay/backward-replay training")
 
     def train_step(ts: TrainState) -> Tuple[TrainState, Dict[str, jax.Array]]:
-        key, kroll = jax.random.split(ts.key)
-        eps = current_eps(cfg, ts.step)
-        batch = forward_rollout(kroll, env, env_params, policy.apply,
-                                ts.params, cfg.num_envs,
-                                exploration_eps=eps)
-        loss, grads = jax.value_and_grad(loss_fn)(ts.params, batch)
-        updates, opt_state = tx.update(grads, ts.opt_state, ts.params)
-        params = optim.apply_updates(ts.params, updates)
-        metrics = {"loss": loss,
-                   "log_z": params.get("log_z", jnp.zeros(())),
-                   "mean_log_reward": jnp.mean(batch.log_reward)}
-        return TrainState(params=params, opt_state=opt_state,
-                          step=ts.step + 1, key=key), (metrics, batch)
+        state, (metrics, batch) = step_fn(LoopState(train=ts, sampler=()))
+        return state.train, (metrics, batch)
 
     return train_step, tx
 
@@ -106,50 +107,45 @@ def init_train_state(key: jax.Array, policy, tx) -> TrainState:
 
 def train(key: jax.Array, env: Environment, env_params, policy,
           cfg: GFNConfig, num_iterations: int,
-          callback: Optional[Callable] = None, callback_every: int = 100):
-    """Python-loop driver with a jitted step (one compile, reused)."""
-    step_fn, tx = make_train_step(env, env_params, policy, cfg)
-    step_fn = jax.jit(step_fn)
-    ts = init_train_state(key, policy, tx)
-    history = []
-    for it in range(num_iterations):
-        ts, (metrics, batch) = step_fn(ts)
-        if callback is not None and (it % callback_every == 0
-                                     or it == num_iterations - 1):
-            history.append(callback(it, ts, metrics, batch))
-    return ts, history
+          callback: Optional[Callable] = None, callback_every: int = 100,
+          sampler=None):
+    """Python-loop driver with a jitted step (one compile, reused).
+
+    Back-compat alias for ``TrainLoop(...).run(mode="python")`` (paper
+    Listing 1/2 usage); returns ``(TrainState, history)`` as in the seed.
+    """
+    from ..algo.loop import TrainLoop
+    loop = TrainLoop(env, env_params, policy, cfg, sampler=sampler)
+    state, history = loop.run(key, num_iterations, mode="python",
+                              callback=callback,
+                              callback_every=callback_every)
+    return state.train, history
 
 
 def train_compiled(key: jax.Array, env: Environment, env_params, policy,
-                   cfg: GFNConfig, num_iterations: int):
-    """Entire training run as one compiled ``lax.scan`` program."""
-    step_fn, tx = make_train_step(env, env_params, policy, cfg)
-    ts = init_train_state(key, policy, tx)
+                   cfg: GFNConfig, num_iterations: int, sampler=None):
+    """Entire training run as one compiled ``lax.scan`` program.
 
-    def body(ts, _):
-        ts, (metrics, batch) = step_fn(ts)
-        return ts, (metrics, batch.log_reward)
-
-    @jax.jit
-    def run(ts):
-        return jax.lax.scan(body, ts, None, length=num_iterations)
-
-    return run(ts)
+    Back-compat alias for ``TrainLoop(...).run(mode="scan")``; returns
+    ``(TrainState, (metrics, log_rewards))`` as in the seed.
+    """
+    from ..algo.loop import TrainLoop
+    loop = TrainLoop(env, env_params, policy, cfg, sampler=sampler)
+    state, aux = loop.run(key, num_iterations, mode="scan")
+    return state.train, aux
 
 
 def train_vectorized(key: jax.Array, env: Environment, env_params, policy,
-                     cfg: GFNConfig, num_iterations: int, num_seeds: int):
+                     cfg: GFNConfig, num_iterations: int, num_seeds: int,
+                     sampler=None):
     """vmap whole training runs over seeds — batched-seed trainer (the
-    paper's 'Trainer vectorization' future-work bullet)."""
-    step_fn, tx = make_train_step(env, env_params, policy, cfg)
+    paper's 'Trainer vectorization' future-work bullet).
 
-    def single(k):
-        ts = init_train_state(k, policy, tx)
-
-        def body(ts, _):
-            ts, (metrics, _) = step_fn(ts)
-            return ts, metrics
-
-        return jax.lax.scan(body, ts, None, length=num_iterations)
-
-    return jax.jit(jax.vmap(single))(jax.random.split(key, num_seeds))
+    Back-compat alias for ``TrainLoop(...).run(mode="vmap_seeds")``; returns
+    ``(TrainState, metrics)`` with a leading seed axis, as in the seed.
+    """
+    from ..algo.loop import TrainLoop
+    loop = TrainLoop(env, env_params, policy, cfg, sampler=sampler)
+    state, metrics = loop.run(key, num_iterations, mode="vmap_seeds",
+                              num_seeds=num_seeds)
+    return state.train, metrics

@@ -28,6 +28,12 @@ from ..core.types import replace
 EnvState = Any
 EnvParams = Any
 
+#: Finite stand-in for log(0) on illegal actions.  Large enough to zero out
+#: any softmax weight, small enough that sums over a trajectory stay finite —
+#: a true -inf turns into NaN gradients the moment it enters a loss
+#: (``jnp.where`` pipes cotangents into both branches).
+ILLEGAL_LOGPROB = -1e9
+
 
 class Environment(abc.ABC):
     """Vectorized, JIT-able GFlowNet environment."""
@@ -125,7 +131,7 @@ class Environment(abc.ABC):
         n_legal = jnp.maximum(jnp.sum(mask, axis=-1), 1)
         legal = jnp.take_along_axis(mask, action[:, None], axis=-1)[:, 0]
         logp = -jnp.log(n_legal.astype(jnp.float32))
-        return jnp.where(legal, logp, -jnp.inf)
+        return jnp.where(legal, logp, ILLEGAL_LOGPROB)
 
 
 def _select_state(pred: jax.Array, old: EnvState, new: EnvState) -> EnvState:

@@ -1,0 +1,11 @@
+"""Recipe registry: declarative specs for every paper benchmark.
+
+Importing this package registers all built-in recipes; list them with
+``python -m repro.run --list`` or :func:`names`.
+"""
+from .base import RECIPES, Recipe, RunOptions, get, names, register
+
+# importing the catalog modules registers their recipes
+from . import dag, hypergrid, ising, phylo, seqs  # noqa: F401  (side effects)
+
+__all__ = ["Recipe", "RunOptions", "RECIPES", "register", "get", "names"]

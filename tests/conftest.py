@@ -1,0 +1,6 @@
+import os
+import sys
+
+# make sibling test helpers (tests/_hyp.py) importable regardless of the
+# pytest import mode / invocation directory
+sys.path.insert(0, os.path.dirname(__file__))

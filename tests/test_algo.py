@@ -1,0 +1,388 @@
+"""Composable training API tests: FIFO buffer (wraparound / valid_mask /
+prioritized), samplers (shapes, scan-compatibility, off-policy TB
+convergence), collecting backward rollout, recipe registry + CLI, and
+back-compat of the seed trainer entry points."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.algo import (SAMPLERS, BackwardReplaySampler, EpsilonNoisySampler,
+                        LoopState, OnPolicySampler, ReplaySampler, TrainLoop,
+                        make_sampler)
+from repro.buffer.fifo import FIFOBuffer
+from repro.core.policies import make_mlp_policy
+from repro.core.rollout import (backward_rollout, concat_rollout_batches,
+                                forward_rollout)
+from repro.core.trainer import GFNConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def small_hypergrid(dim=2, side=5, hidden=(32,)):
+    env = repro.HypergridEnvironment(dim=dim, side=side)
+    params = env.init(KEY)
+    pol = make_mlp_policy(env.obs_dim, env.action_dim,
+                          env.backward_action_dim, hidden=hidden)
+    return env, params, pol
+
+
+# ---------------------------------------------------------------------------
+# FIFO buffer
+# ---------------------------------------------------------------------------
+
+class TestFIFOBuffer:
+    def test_wraparound_overwrites_oldest(self):
+        buf = FIFOBuffer(capacity=6)
+        s = buf.init({"x": jnp.zeros((), jnp.int32)})
+        s = buf.add_batch(s, {"x": jnp.arange(4)})            # 0..3
+        s = buf.add_batch(s, {"x": jnp.arange(4, 9)})         # 4..8 wraps
+        assert int(s.size) == 6
+        assert int(s.insert_pos) == 9 % 6
+        vals = set(np.asarray(s.data["x"]).tolist())
+        assert vals == {3, 4, 5, 6, 7, 8}
+
+    def test_valid_mask_tracks_fill_level(self):
+        buf = FIFOBuffer(capacity=8)
+        s = buf.init({"x": jnp.zeros((), jnp.float32)})
+        assert not np.any(np.asarray(buf.valid_mask(s)))
+        s = buf.add_batch(s, {"x": jnp.ones(3)})
+        mask = np.asarray(buf.valid_mask(s))
+        assert mask.sum() == 3 and mask[:3].all()
+        s = buf.add_batch(s, {"x": jnp.ones(7)})              # wraps, full
+        assert np.asarray(buf.valid_mask(s)).all()
+
+    def test_uniform_sample_never_returns_unfilled_slots(self):
+        buf = FIFOBuffer(capacity=32)
+        s = buf.init({"x": jnp.zeros((), jnp.int32)})
+        s = buf.add_batch(s, {"x": jnp.arange(5) + 7})
+        out = np.asarray(buf.sample(s, KEY, 256)["x"])
+        assert out.min() >= 7 and out.max() <= 11
+
+    def test_prioritized_sample_prefers_high_priority(self):
+        buf = FIFOBuffer(capacity=16)
+        s = buf.init({"x": jnp.zeros((), jnp.int32),
+                      "log_reward": jnp.zeros((), jnp.float32)})
+        log_r = jnp.asarray([0.0, 0.0, 10.0, 0.0, 0.0, 0.0, 0.0, 0.0])
+        s = buf.add_batch(s, {"x": jnp.arange(8), "log_reward": log_r})
+        out = np.asarray(buf.sample_prioritized(
+            s, KEY, 512, priorities=s.data["log_reward"])["x"])
+        # slot 2 has softmax weight ~1; it must dominate and unfilled slots
+        # (index >= 8) must never appear
+        assert (out == 2).mean() > 0.95
+        assert out.max() < 8
+
+    def test_add_batch_larger_than_capacity_raises(self):
+        buf = FIFOBuffer(capacity=4)
+        s = buf.init({"x": jnp.zeros((), jnp.int32)})
+        with pytest.raises(ValueError, match="capacity"):
+            buf.add_batch(s, {"x": jnp.arange(5)})
+
+    def test_prioritized_sample_uniform_when_flat(self):
+        buf = FIFOBuffer(capacity=8)
+        s = buf.init({"x": jnp.zeros((), jnp.int32),
+                      "log_reward": jnp.zeros((), jnp.float32)})
+        s = buf.add_batch(s, {"x": jnp.arange(4),
+                              "log_reward": jnp.zeros(4)})
+        out = np.asarray(buf.sample_prioritized(
+            s, jax.random.PRNGKey(3), 400,
+            priorities=s.data["log_reward"])["x"])
+        counts = np.bincount(out, minlength=4)
+        assert counts.min() > 40                              # all 4 appear
+
+
+# ---------------------------------------------------------------------------
+# Collecting backward rollout
+# ---------------------------------------------------------------------------
+
+class TestBackwardCollect:
+    def _collected(self, B=16):
+        env, params, pol = small_hypergrid()
+        pp = pol.init(KEY)
+        fwd, final_state = forward_rollout(
+            jax.random.PRNGKey(1), env, params, pol.apply, pp, B,
+            return_final_state=True)
+        out = backward_rollout(jax.random.PRNGKey(2), env, params,
+                               pol.apply, pp, final_state, collect=True,
+                               backward_policy="uniform")
+        return env, params, fwd, out
+
+    def test_batch_shapes_match_forward(self):
+        env, params, fwd, out = self._collected()
+        for name in ("obs", "fwd_mask", "bwd_mask", "actions",
+                     "bwd_actions", "valid", "done", "log_reward"):
+            assert getattr(out.batch, name).shape == \
+                getattr(fwd, name).shape, name
+
+    def test_terminal_state_and_reward_preserved(self):
+        env, params, fwd, out = self._collected()
+        np.testing.assert_array_equal(np.asarray(out.batch.obs[-1]),
+                                      np.asarray(fwd.obs[-1]))
+        np.testing.assert_allclose(np.asarray(out.batch.log_reward),
+                                   np.asarray(fwd.log_reward), atol=1e-5)
+        assert np.asarray(out.batch.done[-1]).all()
+
+    def test_left_padding_is_invalid_and_consistent(self):
+        env, params, fwd, out = self._collected()
+        valid = np.asarray(out.batch.valid)
+        # padding (if any) sits at the start: once valid, stays valid
+        for col in valid.T:
+            nz = np.nonzero(col)[0]
+            if len(nz):
+                assert col[nz[0]:].all()
+        # number of real transitions == forward steps taken per trajectory
+        np.testing.assert_array_equal(valid.sum(0),
+                                      np.asarray(fwd.valid).sum(0))
+
+    def test_objective_on_collected_batch_is_finite_and_differentiable(self):
+        from repro.core.trainer import make_loss_fn
+        env, params, pol = small_hypergrid()
+        pp = pol.init(KEY)
+        _, final_state = forward_rollout(
+            jax.random.PRNGKey(1), env, params, pol.apply, pp, 8,
+            return_final_state=True)
+        batch = backward_rollout(jax.random.PRNGKey(2), env, params,
+                                 pol.apply, pp, final_state,
+                                 collect=True).batch
+        cfg = GFNConfig(objective="tb", num_envs=8, stop_action=env.dim)
+        loss_fn = make_loss_fn(env, pol.apply, cfg)
+        loss, grads = jax.value_and_grad(loss_fn)(pp, batch)
+        assert np.isfinite(float(loss))
+        for g in jax.tree_util.tree_leaves(grads):
+            assert np.all(np.isfinite(np.asarray(g)))
+
+    def test_concat_rollout_batches(self):
+        env, params, pol = small_hypergrid()
+        pp = pol.init(KEY)
+        a = forward_rollout(jax.random.PRNGKey(1), env, params, pol.apply,
+                            pp, 4)
+        b = forward_rollout(jax.random.PRNGKey(2), env, params, pol.apply,
+                            pp, 6)
+        c = concat_rollout_batches(a, b)
+        assert c.log_reward.shape == (10,)
+        assert c.obs.shape == (a.obs.shape[0], 10) + a.obs.shape[2:]
+        np.testing.assert_array_equal(np.asarray(c.actions[:, :4]),
+                                      np.asarray(a.actions))
+
+
+# ---------------------------------------------------------------------------
+# Samplers
+# ---------------------------------------------------------------------------
+
+ALL_SAMPLERS = [
+    OnPolicySampler(),
+    EpsilonNoisySampler(eps=0.3, anneal_steps=100),
+    ReplaySampler(capacity=64, replay_batch=8),
+    BackwardReplaySampler(capacity=64, replay_batch=8, prioritized=True),
+]
+
+
+class TestSamplers:
+    @pytest.mark.parametrize("sampler", ALL_SAMPLERS,
+                             ids=lambda s: type(s).__name__)
+    def test_sample_shapes_and_scan_safety(self, sampler):
+        env, params, pol = small_hypergrid()
+        pp = pol.init(KEY)
+        cfg = GFNConfig(objective="tb", num_envs=8, stop_action=env.dim)
+        init_fn, sample_fn = sampler.build(env, params, pol.apply, cfg)
+        state = init_fn()
+
+        # batch size: fresh num_envs (+ replay_batch for replay samplers)
+        expect_B = 8 + (8 if isinstance(sampler, ReplaySampler) else 0)
+        state, batch = jax.jit(sample_fn)(state, KEY, pp,
+                                          jnp.zeros((), jnp.int32))
+        assert batch.log_reward.shape == (expect_B,)
+        assert batch.actions.shape == (env.max_steps, expect_B)
+
+        # must run inside lax.scan with the state as carry
+        def body(carry, key):
+            s, step = carry
+            s, b = sample_fn(s, key, pp, step)
+            return (s, step + 1), jnp.mean(b.log_reward)
+
+        (_, _), means = jax.jit(lambda c, k: jax.lax.scan(body, c, k))(
+            (state, jnp.zeros((), jnp.int32)), jax.random.split(KEY, 3))
+        assert np.all(np.isfinite(np.asarray(means)))
+
+    def test_registry_and_make_sampler(self):
+        assert set(SAMPLERS) == {"on_policy", "eps_noisy", "replay",
+                                 "backward_replay"}
+        assert isinstance(make_sampler("replay", capacity=32),
+                          ReplaySampler)
+        s = OnPolicySampler()
+        assert make_sampler(s) is s
+        with pytest.raises(KeyError):
+            make_sampler("nope")
+
+    def test_replay_buffer_fills_across_steps(self):
+        env, params, pol = small_hypergrid()
+        pp = pol.init(KEY)
+        cfg = GFNConfig(objective="tb", num_envs=8, stop_action=env.dim)
+        sampler = ReplaySampler(capacity=64, replay_batch=4)
+        init_fn, sample_fn = sampler.build(env, params, pol.apply, cfg)
+        state = init_fn()
+        assert int(state.size) == 0
+        for i in range(3):
+            state, _ = sample_fn(state, jax.random.PRNGKey(i), pp,
+                                 jnp.asarray(i, jnp.int32))
+        assert int(state.size) == 24
+
+
+# ---------------------------------------------------------------------------
+# TrainLoop end-to-end
+# ---------------------------------------------------------------------------
+
+class TestTrainLoop:
+    def test_replay_sampler_tb_loss_decreases_in_scan_mode(self):
+        """Satellite requirement: a short off-policy TB run on Hypergrid
+        (ReplaySampler inside the fully-compiled scan) decreases loss."""
+        env = repro.HypergridEnvironment(dim=2, side=6)
+        params = env.init(KEY)
+        pol = make_mlp_policy(env.obs_dim, env.action_dim,
+                              env.backward_action_dim, hidden=(64, 64))
+        cfg = GFNConfig(objective="tb", num_envs=16, lr=1e-3, log_z_lr=1e-1,
+                        stop_action=env.dim, exploration_eps=0.1)
+        loop = TrainLoop(env, params, pol, cfg,
+                         sampler=ReplaySampler(capacity=512,
+                                               replay_batch=16))
+        st, (m, log_r) = loop.run(jax.random.PRNGKey(1), 400, mode="scan")
+        L = np.asarray(m["loss"])
+        assert np.all(np.isfinite(L))
+        assert L[-20:].mean() < 0.25 * L[:20].mean()
+        assert isinstance(st, LoopState)
+        assert int(st.sampler.size) > 0                     # buffer was used
+
+    def test_backward_replay_scan_mode_finite(self):
+        env, params, pol = small_hypergrid()
+        cfg = GFNConfig(objective="db", num_envs=8, stop_action=env.dim)
+        loop = TrainLoop(env, params, pol, cfg,
+                         sampler=BackwardReplaySampler(capacity=64,
+                                                       replay_batch=8))
+        _, (m, _) = loop.run(jax.random.PRNGKey(2), 30, mode="scan")
+        assert np.all(np.isfinite(np.asarray(m["loss"])))
+
+    def test_vmap_seeds_mode_with_sampler_state(self):
+        env, params, pol = small_hypergrid(hidden=(16,))
+        cfg = GFNConfig(objective="tb", num_envs=4, stop_action=env.dim)
+        loop = TrainLoop(env, params, pol, cfg,
+                         sampler=ReplaySampler(capacity=32, replay_batch=4))
+        st, metrics = loop.run(jax.random.PRNGKey(3), 10, mode="vmap_seeds",
+                               num_seeds=2)
+        assert metrics["loss"].shape == (2, 10)
+        assert st.sampler.size.shape == (2,)                # per-seed buffer
+
+    def test_bad_mode_raises(self):
+        env, params, pol = small_hypergrid(hidden=(16,))
+        cfg = GFNConfig(objective="tb", num_envs=4, stop_action=env.dim)
+        loop = TrainLoop(env, params, pol, cfg)
+        with pytest.raises(ValueError):
+            loop.run(KEY, 5, mode="pmap")
+
+    def test_callback_rejected_in_compiled_modes(self):
+        env, params, pol = small_hypergrid(hidden=(16,))
+        cfg = GFNConfig(objective="tb", num_envs=4, stop_action=env.dim)
+        loop = TrainLoop(env, params, pol, cfg)
+        with pytest.raises(ValueError, match="callback"):
+            loop.run(KEY, 5, mode="scan", callback=lambda *a: None)
+
+
+# ---------------------------------------------------------------------------
+# Back-compat aliases
+# ---------------------------------------------------------------------------
+
+class TestBackCompat:
+    def test_train_python_alias(self):
+        env, params, pol = small_hypergrid(hidden=(16,))
+        cfg = GFNConfig(objective="tb", num_envs=4, stop_action=env.dim)
+        seen = []
+        ts, history = repro.train(
+            KEY, env, params, pol, cfg, num_iterations=6,
+            callback=lambda it, ts, m, b: seen.append(it) or float(m["loss"]),
+            callback_every=2)
+        assert seen == [0, 2, 4, 5]
+        assert int(ts.step) == 6
+        assert all(np.isfinite(h) for h in history)
+
+    def test_make_train_step_rejects_stateful_sampler(self):
+        from repro.core.trainer import make_train_step
+        env, params, pol = small_hypergrid(hidden=(16,))
+        cfg = GFNConfig(objective="tb", num_envs=4, stop_action=env.dim)
+        with pytest.raises(ValueError):
+            make_train_step(env, params, pol, cfg,
+                            sampler=ReplaySampler(capacity=16))
+
+
+# ---------------------------------------------------------------------------
+# Recipes + CLI
+# ---------------------------------------------------------------------------
+
+class TestRecipes:
+    def test_all_ten_baselines_registered(self):
+        from repro import recipes
+        expected = {"hypergrid_tb", "hypergrid_db", "hypergrid_subtb",
+                    "bitseq_tb", "qm9_tb", "tfbind8_tb", "amp_tb",
+                    "dag_mdb", "phylo_fldb", "ising_ebgfn"}
+        assert expected <= set(recipes.names())
+        for name in expected:
+            r = recipes.get(name)
+            assert r.description
+            assert r.make_env is not None
+
+    def test_unknown_recipe_raises_with_listing(self):
+        from repro import recipes
+        with pytest.raises(KeyError, match="hypergrid_tb"):
+            recipes.get("not_a_recipe")
+
+    def test_run_recipe_smoke_with_overrides(self):
+        from repro.run import run_recipe
+        lines = []
+        out = run_recipe("hypergrid_tb", seed=0, iterations=8, num_envs=8,
+                         eval_every=4, env={"dim": 2, "side": 4},
+                         log=lines.append)
+        assert out["recipe"] == "hypergrid_tb"
+        assert len(out["history"]) == 3                     # it 0, 4, 7
+        assert all(np.isfinite(row["loss"]) for row in out["history"])
+        assert "tv" in out["history"][-1]
+        assert len(lines) == 3
+
+    def test_run_recipe_with_replay_sampler(self):
+        from repro.run import run_recipe
+        out = run_recipe("hypergrid_tb", iterations=6, num_envs=8,
+                         eval_every=3, env={"dim": 2, "side": 4},
+                         sampler="replay",
+                         sampler_kwargs={"capacity": 64, "replay_batch": 8},
+                         log=lambda *_: None)
+        assert np.isfinite(out["history"][-1]["loss"])
+
+    def test_cli_main_list_and_run(self, capsys):
+        from repro.run import main
+        assert main(["--list"]) == 0
+        captured = capsys.readouterr().out
+        assert "hypergrid_tb" in captured and "ising_ebgfn" in captured
+        assert main(["--recipe", "hypergrid_tb", "--iterations", "5",
+                     "--eval-every", "5", "--num-envs", "4",
+                     "--set", "dim=2", "--set", "side=4",
+                     "--cfg", "lr=3e-4"]) == 0
+
+    def test_register_new_recipe(self):
+        from repro import recipes
+        from repro.core.policies import make_mlp_policy as mk
+        r = recipes.Recipe(
+            name="_test_tmp",
+            description="tmp",
+            make_env=lambda: repro.HypergridEnvironment(dim=2, side=4),
+            make_policy=lambda env: mk(env.obs_dim, env.action_dim,
+                                       env.backward_action_dim,
+                                       hidden=(8,)),
+            make_config=lambda env, opts: GFNConfig(
+                objective="tb", num_envs=opts.num_envs,
+                stop_action=env.dim),
+            iterations=4, eval_every=2, num_envs=4)
+        try:
+            recipes.register(r)
+            from repro.run import run_recipe
+            out = run_recipe("_test_tmp", log=lambda *_: None)
+            assert np.isfinite(out["history"][-1]["loss"])
+        finally:
+            recipes.RECIPES.pop("_test_tmp", None)

@@ -401,3 +401,125 @@ class TestPhylo:
         assert tree_allclose(state, prev)
         fa = env.get_forward_action(ns, ba, prev, params)
         assert int(fa[0]) == int(a[0])
+
+
+# ---------------------------------------------------------------------------
+# Forward/backward action round-trip (property test across all environments)
+# ---------------------------------------------------------------------------
+
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+
+
+def _roundtrip_env_factories():
+    """Small instances of all seven environment families."""
+    from repro.envs.phylo import PhyloEnvironment
+    return {
+        "hypergrid": lambda: repro.HypergridEnvironment(dim=2, side=4),
+        "bitseq": lambda: repro.BitSeqEnvironment(n=8, k=2),
+        "tfbind8": lambda: repro.TFBind8Environment(),
+        "qm9": lambda: repro.QM9Environment(),
+        "amp": lambda: repro.AMPEnvironment(max_len=6),
+        "dag": lambda: repro.DAGEnvironment(d=3),
+        "ising": lambda: repro.IsingEnvironment(n=3),
+        "phylo": lambda: PhyloEnvironment(n_species=5, n_sites=8),
+    }
+
+
+_ROUNDTRIP_CACHE = {}
+
+
+def _roundtrip_env(name):
+    if name not in _ROUNDTRIP_CACHE:
+        env = _roundtrip_env_factories()[name]()
+        _ROUNDTRIP_CACHE[name] = (env, env.init(KEY))
+    return _ROUNDTRIP_CACHE[name]
+
+
+def _assert_rows_equal(tree_a, tree_b, rows, msg):
+    for la, lb in zip(jax.tree_util.tree_leaves(tree_a),
+                      jax.tree_util.tree_leaves(tree_b)):
+        np.testing.assert_array_equal(np.asarray(la)[rows],
+                                      np.asarray(lb)[rows], err_msg=msg)
+
+
+class TestForwardBackwardRoundTrip:
+    """For every environment: applying a legal forward action, mapping it to
+    its structural backward action, and stepping backward must recover the
+    original state; ``get_forward_action`` must recover the original action
+    (it is the inverse of ``get_backward_action``)."""
+
+    @pytest.mark.parametrize("name", sorted(_roundtrip_env_factories()))
+    @settings(max_examples=3, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_roundtrip(self, name, seed):
+        env, params = _roundtrip_env(name)
+        B = 4
+        rng = np.random.RandomState(seed)
+        _, state = env.reset(B, params)
+        for t in range(env.max_steps):
+            was_done = np.asarray(env.is_terminal(state, params))
+            if was_done.all():
+                break
+            fmask = np.asarray(env.forward_mask(state, params))
+            # random legal action; argmax fallback on terminal rows
+            safe = np.where(was_done[:, None], np.ones_like(fmask), fmask)
+            probs = safe / safe.sum(-1, keepdims=True)
+            actions = jnp.asarray(
+                [rng.choice(env.action_dim, p=p) for p in probs],
+                jnp.int32)
+            _, nstate, _, _, _ = env.step(state, actions, params)
+            live = ~was_done
+
+            bwd = env.get_backward_action(state, actions, nstate, params)
+            bmask_next = np.asarray(env.backward_mask(nstate, params))
+            legal = np.take_along_axis(
+                bmask_next, np.asarray(bwd)[:, None], axis=-1)[:, 0]
+            assert legal[live].all(), \
+                f"{name}: reverse action illegal at step {t}"
+
+            _, back, _, _, _ = env.backward_step(nstate, bwd, params)
+            _assert_rows_equal(state, back, live,
+                               f"{name}: backward_step did not invert "
+                               f"forward step at t={t}")
+
+            fwd = np.asarray(
+                env.get_forward_action(nstate, bwd, back, params))
+            np.testing.assert_array_equal(
+                fwd[live], np.asarray(actions)[live],
+                err_msg=f"{name}: get_forward_action is not the inverse "
+                        f"of get_backward_action at t={t}")
+            state = nstate
+
+
+class TestUniformBackwardLogprob:
+    """The illegal-action branch must be a large *finite* value: a -inf
+    flowing through jnp.where turns into NaN gradients in any loss."""
+
+    def test_illegal_action_is_finite_and_legal_is_uniform(self):
+        env = repro.HypergridEnvironment(dim=2, side=4)
+        params = env.init(KEY)
+        _, state = env.reset(3, params)
+        # step coordinate 0 so exactly one backward action (dec 0) is legal
+        _, state, _, _, _ = env.step(state, jnp.zeros(3, jnp.int32), params)
+        legal = env.uniform_backward_logprob(state, jnp.zeros(3, jnp.int32),
+                                             params)
+        np.testing.assert_allclose(np.asarray(legal), 0.0, atol=1e-6)
+        illegal = env.uniform_backward_logprob(state,
+                                               jnp.ones(3, jnp.int32),
+                                               params)
+        assert np.all(np.isfinite(np.asarray(illegal)))
+        assert np.all(np.asarray(illegal) < -1e8)
+
+    def test_gradient_through_logprob_stays_finite(self):
+        env = repro.HypergridEnvironment(dim=2, side=4)
+        params = env.init(KEY)
+        _, state = env.reset(2, params)
+        _, state, _, _, _ = env.step(state, jnp.zeros(2, jnp.int32), params)
+
+        def loss(scale):
+            lp = env.uniform_backward_logprob(
+                state, jnp.ones(2, jnp.int32), params)   # illegal action
+            return jnp.sum(jnp.where(lp > -1e8, scale * lp, 0.0))
+
+        g = jax.grad(loss)(jnp.asarray(1.0))
+        assert np.isfinite(float(g))
