@@ -39,6 +39,39 @@ from .common import row
 KEY = jax.random.PRNGKey(0)
 
 
+def metrics_json_rows(path: str):
+    """Consume a ``repro.run --metrics-json`` dump (the compiled eval-suite
+    log) as benchmark rows: first/final/best value per metric.
+
+    This lets quality tables be produced from training runs directly —
+    ``python -m repro.run --recipe hypergrid_tb --metrics-json m.json`` then
+    ``python -m benchmarks.run --only metrics --metrics-json m.json`` —
+    instead of re-training inside the benchmark process.
+    """
+    import json
+    import math
+    with open(path) as f:
+        doc = json.load(f)
+    version = doc.get("schema_version")
+    if version != 1:
+        raise ValueError(f"unsupported metrics schema_version {version!r} "
+                         f"in {path}")
+    rows = []
+    for name in doc["metric_names"]:
+        series = [r[name] for r in doc["rows"]
+                  if name in r and math.isfinite(r[name])]
+        if not series:
+            continue
+        # min/max rather than "best": whether lower or higher is better
+        # depends on the metric (tv/jsd vs correlations/mode_hits)
+        rows.append(row(f"metrics/{doc['recipe']}_{name}", 0.0,
+                        first=f"{series[0]:.4f}",
+                        final=f"{series[-1]:.4f}",
+                        min=f"{min(series):.4f}",
+                        max=f"{max(series):.4f}"))
+    return rows
+
+
 def _train(env, policy, cfg, iters):
     params = env.init(KEY)
     step, tx = make_train_step(env, params, policy, cfg)

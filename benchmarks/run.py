@@ -16,7 +16,10 @@ def main() -> None:
                     help="paper-scale settings (hours); default quick mode")
     ap.add_argument("--only", default=None,
                     help="run a single suite: table1|fig2|table2|fig3|fig4|"
-                         "fig5|fig6|fig7|table8|roofline")
+                         "fig5|fig6|fig7|table8|roofline|metrics")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="path of a `repro.run --metrics-json` dump for the "
+                         "'metrics' suite")
     args = ap.parse_args()
     quick = not args.full
 
@@ -34,7 +37,12 @@ def main() -> None:
         "table8": lambda: quality.table8_ising_ebgfn(quick),
         "roofline": lambda: roofline.run(quick),
     }
+    if args.metrics_json:
+        suites["metrics"] = \
+            lambda: quality.metrics_json_rows(args.metrics_json)
     if args.only:
+        if args.only == "metrics" and not args.metrics_json:
+            ap.error("--only metrics requires --metrics-json PATH")
         suites = {args.only: suites[args.only]}
 
     print("name,us_per_call,derived")

@@ -23,8 +23,10 @@ from .core.trainer import (GFNConfig, train, train_compiled,
                            train_vectorized)
 from .algo import (BackwardReplaySampler, EpsilonNoisySampler,
                    OnPolicySampler, ReplaySampler, Sampler, TrainLoop)
+from .evals import (EvalSuite, ExactDistributionEval, LogZBoundsEval,
+                    RewardCorrelationEval, SampledDistributionEval)
 
-__version__ = "1.1.0"
+__version__ = "1.2.0"
 
 __all__ = [
     "Environment", "HypergridEnvironment", "BitSeqEnvironment",
@@ -35,4 +37,6 @@ __all__ = [
     "GFNConfig", "train", "train_compiled", "train_vectorized",
     "Sampler", "OnPolicySampler", "EpsilonNoisySampler", "ReplaySampler",
     "BackwardReplaySampler", "TrainLoop",
+    "EvalSuite", "ExactDistributionEval", "SampledDistributionEval",
+    "RewardCorrelationEval", "LogZBoundsEval",
 ]

@@ -24,16 +24,19 @@ import jax.numpy as jnp
 
 from ..core.trainer import (GFNConfig, init_train_state, make_loss_fn,
                             make_optimizer)
-from ..core.types import TrainState, pytree_dataclass
+from ..core.types import TrainState, pytree_dataclass, replace
 from ..optim import adamw as optim
 from .samplers import Sampler, make_sampler
 
 
 @pytree_dataclass
 class LoopState:
-    """Training-loop carry: optimizer/train state plus sampler state."""
+    """Training-loop carry: optimizer/train state, sampler state, and the
+    in-scan metric log (``()`` when no :class:`repro.evals.EvalSuite` is
+    attached)."""
     train: TrainState
     sampler: Any
+    metrics: Any = ()
 
 
 def make_sampler_train_step(env, env_params, policy, cfg: GFNConfig,
@@ -62,7 +65,8 @@ def make_sampler_train_step(env, env_params, policy, cfg: GFNConfig,
                    "mean_log_reward": jnp.mean(batch.log_reward)}
         train = TrainState(params=params, opt_state=opt_state,
                            step=ts.step + 1, key=key)
-        return LoopState(train=train, sampler=sampler_state), (metrics, batch)
+        return (LoopState(train=train, sampler=sampler_state,
+                          metrics=state.metrics), (metrics, batch))
 
     return step_fn, tx, init_sampler
 
@@ -77,21 +81,50 @@ class TrainLoop:
     ``sampler`` accepts a :class:`Sampler` instance or a registry name
     (``"on_policy"``, ``"eps_noisy"``, ``"replay"``, ``"backward_replay"``);
     default is on-policy, reproducing the seed trainer exactly.
+
+    ``evals`` accepts a :class:`repro.evals.EvalSuite`; its evaluators run
+    *inside* the compiled step through a ``lax.cond`` gate every
+    ``evals.every`` iterations, writing rows into the ``metrics`` slot of the
+    carry — evaluation is read-only (its PRNG stream is independent of the
+    training key), so attaching a suite leaves training trajectories
+    bitwise identical.
     """
 
     def __init__(self, env, env_params, policy, cfg: GFNConfig,
-                 sampler=None):
+                 sampler=None, evals=None):
         self.env = env
         self.env_params = env_params
         self.policy = policy
         self.cfg = cfg
         self.sampler = make_sampler(sampler or "on_policy")
+        self.evals = evals
         self.step_fn, self.tx, self._init_sampler = make_sampler_train_step(
             env, env_params, policy, cfg, self.sampler)
 
-    def init(self, key: jax.Array) -> LoopState:
+    def init(self, key: jax.Array,
+             num_iterations: Optional[int] = None) -> LoopState:
+        """Fresh carry; pass ``num_iterations`` to size the metric buffers
+        when an eval suite is attached."""
         train = init_train_state(key, self.policy, self.tx)
-        return LoopState(train=train, sampler=self._init_sampler())
+        metrics = ()
+        if self.evals is not None:
+            if num_iterations is None:
+                raise ValueError("TrainLoop with an EvalSuite needs "
+                                 "num_iterations to size the metric buffer")
+            metrics = self.evals.init_state(num_iterations)
+        return LoopState(train=train, sampler=self._init_sampler(),
+                         metrics=metrics)
+
+    def _step_with_eval(self, state: LoopState):
+        """One training step followed by the cond-gated eval hook.  The hook
+        sees post-update params at iteration ``step - 1``, matching the
+        python-mode callback cadence (it fires at ``it % every == 0``)."""
+        state, out = self.step_fn(state)
+        if self.evals is not None:
+            ms = self.evals.maybe_record(state.metrics, state.train.params,
+                                         state.train.step - 1)
+            state = replace(state, metrics=ms)
+        return state, out
 
     def run(self, key: jax.Array, num_iterations: int, *,
             mode: str = "python", num_seeds: Optional[int] = None,
@@ -106,8 +139,8 @@ class TrainLoop:
           ``num_seeds`` axis on every leaf (requires ``num_seeds``).
         """
         if mode == "python":
-            step = jax.jit(self.step_fn)
-            state = self.init(key)
+            step = jax.jit(self._step_with_eval)
+            state = self.init(key, num_iterations)
             history = []
             for it in range(num_iterations):
                 state, (metrics, batch) = step(state)
@@ -122,10 +155,10 @@ class TrainLoop:
                 f"mode={mode!r}); compiled modes cannot call host code")
 
         if mode == "scan":
-            state = self.init(key)
+            state = self.init(key, num_iterations)
 
             def body(s, _):
-                s, (metrics, batch) = self.step_fn(s)
+                s, (metrics, batch) = self._step_with_eval(s)
                 return s, (metrics, batch.log_reward)
 
             @jax.jit
@@ -139,10 +172,10 @@ class TrainLoop:
                 raise ValueError("mode='vmap_seeds' requires num_seeds")
 
             def single(k):
-                s = self.init(k)
+                s = self.init(k, num_iterations)
 
                 def body(s, _):
-                    s, (metrics, _) = self.step_fn(s)
+                    s, (metrics, _) = self._step_with_eval(s)
                     return s, metrics
 
                 return jax.lax.scan(body, s, None, length=num_iterations)

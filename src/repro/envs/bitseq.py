@@ -165,6 +165,32 @@ class BitSeqEnvironment(Environment):
         return BitSeqState(tokens=words.astype(jnp.int32),
                            steps=jnp.full((B,), self.L, jnp.int32))
 
+    # -- exact target (small instances; paper §B.2 TV evaluation) ----------
+    def flatten_index(self, tokens: jax.Array) -> jax.Array:
+        """Base-m flat index of a full word sequence, matching
+        ``true_distribution`` / ``repro.evals.make_bitseq_dp`` ordering."""
+        idx = jnp.zeros(tokens.shape[:-1], jnp.int32)
+        for i in range(self.L):
+            idx = idx * self.m + tokens[..., i]
+        return idx
+
+    def true_distribution(self, params: BitSeqParams,
+                          max_states: int = 1 << 22) -> jax.Array:
+        """Exact R(x)/Z over all m^L terminal words (flat base-m C-order).
+
+        Only feasible for small instances (m**L states enumerated); raises
+        for larger ones — use sampling evaluators there.
+        """
+        num = self.m ** self.L
+        if num > max_states:
+            raise ValueError(
+                f"bitseq has {num} terminal states > {max_states}; "
+                "exact target is only available for small instances")
+        words = jnp.stack(jnp.meshgrid(
+            *[jnp.arange(self.m)] * self.L, indexing="ij"),
+            axis=-1).reshape(-1, self.L).astype(jnp.int32)
+        return jax.nn.softmax(self.log_reward_of_words(words, params))
+
 
 def _popcount(x: jax.Array, bits: int) -> jax.Array:
     c = jnp.zeros_like(x)

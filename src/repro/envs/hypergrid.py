@@ -131,3 +131,15 @@ class HypergridEnvironment(Environment):
         for i in range(self.dim):
             idx = idx * self.side + pos[..., i]
         return idx
+
+    def terminal_state_from_flat_index(self, idx: jax.Array
+                                       ) -> HypergridState:
+        """Terminal-copy states for flat C-order indices (inverse of
+        ``flatten_index``) — probe-set construction for eval suites."""
+        pos = jnp.stack(
+            [(idx // self.side ** (self.dim - 1 - i)) % self.side
+             for i in range(self.dim)], axis=-1).astype(jnp.int32)
+        return HypergridState(
+            pos=pos,
+            terminal=jnp.ones(idx.shape, bool),
+            steps=jnp.sum(pos, axis=-1).astype(jnp.int32) + 1)

@@ -1,0 +1,27 @@
+"""Compiled evaluation subsystem (paper §B): in-scan metric hooks, exact
+terminal distributions, sampling metrics, and log-partition bounds.
+
+Three evaluator families plug into :class:`EvalSuite`, which
+:class:`repro.algo.TrainLoop` runs inside its compiled scan:
+
+- :class:`ExactDistributionEval` — exact TV/JSD by dynamic programming over
+  the learned P_F (enumerable envs: hypergrid, small bitseq);
+- :class:`SampledDistributionEval` / :class:`RewardCorrelationEval` —
+  empirical TV/JSD, mode coverage, Spearman/Pearson reward correlation;
+- :class:`LogZBoundsEval` — ELBO/EUBO sandwich + MC log-Z estimate (§B.2).
+"""
+from .bounds import LogZBoundsEval
+from .exact import (ExactDistributionEval, make_bitseq_dp, make_exact_dp,
+                    make_hypergrid_dp)
+from .sampling import (RewardCorrelationEval, SampledDistributionEval,
+                       uniform_probe_states)
+from .suite import EvalSuite, Evaluator, MetricsState
+
+__all__ = [
+    "EvalSuite", "Evaluator", "MetricsState",
+    "ExactDistributionEval", "make_exact_dp", "make_hypergrid_dp",
+    "make_bitseq_dp",
+    "SampledDistributionEval", "RewardCorrelationEval",
+    "uniform_probe_states",
+    "LogZBoundsEval",
+]

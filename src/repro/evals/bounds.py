@@ -1,0 +1,64 @@
+"""Log-partition-function bounds (paper §B.2): ELBO, EUBO, and the
+forward importance-sampling estimator of log Z.
+
+With trajectory weight ``w(tau) = log R(x) + log P_B(tau|x) - log P_F(tau)``:
+
+  ELBO      E_{tau ~ P_F}[w]                  <= log Z   (Jensen)
+  log_z_is  logsumexp_i(w_i) - log N  over tau_i ~ P_F   (consistent IS)
+  EUBO      E_{x ~ R/Z, tau ~ P_B(.|x)}[w]    >= log Z   (= log Z + KL(Q*||P_F))
+
+ELBO/EUBO sandwich log Z and their gap upper-bounds the symmetrized KL
+between the sampler and the target, so a shrinking sandwich is direct
+evidence of distributional convergence — unlike the loss curve.  EUBO needs
+target samples, so it is only emitted when a probe of reward-distributed
+terminal states is supplied (exactly available for enumerable envs).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.objectives import evaluate_trajectory
+from ..core.rollout import backward_rollout, forward_rollout
+
+
+class LogZBoundsEval:
+    """``elbo`` / ``log_z_is`` from forward rollouts, plus ``eubo`` from
+    backward rollouts over target-distributed probe terminals when given.
+
+    Stop actions need no special handling: a sampled stop is an ordinary
+    action whose log-prob is already part of ``sum(log_pf)``."""
+
+    def __init__(self, env, env_params, policy_apply, num_samples: int = 256,
+                 target_states=None,
+                 target_log_r: Optional[jax.Array] = None):
+        self.env = env
+        self.env_params = env_params
+        self.policy_apply = policy_apply
+        self.num_samples = int(num_samples)
+        self.target_states = target_states
+        self.target_log_r = (None if target_log_r is None
+                             else jnp.asarray(target_log_r, jnp.float32))
+        names: Tuple[str, ...] = ("elbo", "log_z_is")
+        if target_states is not None:
+            names += ("eubo",)
+        self.metric_names = names
+
+    def __call__(self, key: jax.Array, params) -> Dict[str, jax.Array]:
+        k_fwd, k_bwd = jax.random.split(key)
+        batch = forward_rollout(k_fwd, self.env, self.env_params,
+                                self.policy_apply, params, self.num_samples)
+        ev = evaluate_trajectory(self.policy_apply, params, batch)
+        w = (batch.log_reward + jnp.sum(ev.log_pb, axis=0)
+             - jnp.sum(ev.log_pf, axis=0))
+        out = {"elbo": jnp.mean(w),
+               "log_z_is": (jax.nn.logsumexp(w)
+                            - jnp.log(float(self.num_samples)))}
+        if self.target_states is not None:
+            br = backward_rollout(k_bwd, self.env, self.env_params,
+                                  self.policy_apply, params,
+                                  self.target_states)
+            out["eubo"] = jnp.mean(self.target_log_r + br.log_pb - br.log_pf)
+        return out

@@ -1,0 +1,125 @@
+"""Sampling evaluators for environments too large to enumerate (paper
+§B.2-§B.5): empirical TV/JSD, reward correlations over a fixed probe set,
+and mode-coverage counts.
+
+All evaluators here are jittable ``(key, params) -> {name: scalar}``
+callables suitable for :class:`repro.evals.EvalSuite`; anything that needs
+host work (probe-set construction, uniform reference rollouts) happens once
+at build time.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.rollout import forward_rollout
+from ..metrics.distributions import (empirical_distribution, jensen_shannon,
+                                     log_prob_mc_estimate,
+                                     pearson_correlation,
+                                     spearman_correlation, total_variation)
+
+
+class SampledDistributionEval:
+    """On-policy rollout histogram vs a target: ``sample_tv`` /
+    ``sample_jsd``, plus ``mode_hits`` (distinct modes discovered in the
+    sample) when a mode-index set is supplied.
+
+    ``index_fn(batch) -> (B,)`` maps a rollout batch to flat terminal-state
+    indices in the target's ordering (e.g. ``env.flatten_index`` of the
+    terminal observation).
+    """
+
+    def __init__(self, env, env_params, policy_apply,
+                 index_fn: Callable, num_states: int,
+                 true_dist: Optional[jax.Array] = None,
+                 mode_indices: Optional[jax.Array] = None,
+                 num_samples: int = 2000):
+        self.env = env
+        self.env_params = env_params
+        self.policy_apply = policy_apply
+        self.index_fn = index_fn
+        self.num_states = int(num_states)
+        self.true = true_dist
+        self.mode_indices = (None if mode_indices is None
+                             else jnp.asarray(mode_indices, jnp.int32))
+        self.num_samples = int(num_samples)
+        names: Tuple[str, ...] = ()
+        if true_dist is not None:
+            names += ("sample_tv", "sample_jsd")
+        if mode_indices is not None:
+            names += ("mode_hits",)
+        if not names:
+            raise ValueError("need true_dist and/or mode_indices")
+        self.metric_names = names
+
+    def __call__(self, key: jax.Array, params) -> Dict[str, jax.Array]:
+        batch = forward_rollout(key, self.env, self.env_params,
+                                self.policy_apply, params, self.num_samples)
+        idx = self.index_fn(batch)
+        out: Dict[str, jax.Array] = {}
+        if self.true is not None:
+            emp = empirical_distribution(idx, self.num_states)
+            out["sample_tv"] = total_variation(emp, self.true)
+            out["sample_jsd"] = jensen_shannon(emp, self.true)
+        if self.mode_indices is not None:
+            hits = jnp.any(idx[None, :] == self.mode_indices[:, None],
+                           axis=1)
+            out["mode_hits"] = jnp.sum(hits).astype(jnp.float32)
+        return out
+
+
+class RewardCorrelationEval:
+    """``pearson`` / ``spearman`` correlation of the MC log-probability
+    estimate log P_hat_theta(x) (paper §B.2, via backward rollouts) against
+    log R(x) over a *fixed* probe set of terminal states — the paper's
+    Fig. 3/6 metric.  A fixed probe keeps the curve's variance down and makes
+    successive evals comparable."""
+
+    metric_names: Tuple[str, ...] = ("pearson", "spearman")
+
+    def __init__(self, env, env_params, policy_apply, probe_states,
+                 probe_log_r: jax.Array, mc_samples: int = 8):
+        self.env = env
+        self.env_params = env_params
+        self.policy_apply = policy_apply
+        self.probe_states = probe_states
+        self.probe_log_r = jnp.asarray(probe_log_r, jnp.float32)
+        self.mc_samples = int(mc_samples)
+
+    def __call__(self, key: jax.Array, params) -> Dict[str, jax.Array]:
+        lp = log_prob_mc_estimate(key, self.env, self.env_params,
+                                  self.policy_apply, params,
+                                  self.probe_states,
+                                  num_samples=self.mc_samples)
+        return {"pearson": pearson_correlation(lp, self.probe_log_r),
+                "spearman": spearman_correlation(lp, self.probe_log_r)}
+
+
+def uniform_probe_states(key: jax.Array, env, env_params, num_probe: int,
+                         stop_action=None):
+    """Terminal states + log-rewards from a uniform-policy rollout.
+
+    Probe sets for correlation evals need log-reward *spread*; a trained
+    sampler concentrates on near-identical rewards, while uniform rollouts
+    span the reward range (how the paper builds its phylo/bitseq test sets).
+    Host-side, run once at suite construction.
+
+    For envs with an always-legal stop action (e.g. DAG), pass
+    ``stop_action``: rollouts that ran out of steps before choosing stop are
+    force-terminated with one final stop step, so every probe state is a
+    genuine terminal (backward rollouts from non-terminals would drop the
+    stop transition from log P_F and skew correlation metrics).
+    """
+    def uniform_apply(_params, obs):
+        return {"logits": jnp.zeros((obs.shape[0], env.action_dim),
+                                    jnp.float32)}
+
+    _, final = forward_rollout(key, env, env_params, uniform_apply, None,
+                               num_probe, return_final_state=True)
+    if stop_action is not None:
+        # env.step is a no-op on already-terminal sub-environments
+        stop = jnp.full((num_probe,), stop_action, jnp.int32)
+        _, final, _, _, _ = env.step(final, stop, env_params)
+    return final, env.log_reward(final, env_params)

@@ -1,0 +1,154 @@
+"""Compiled evaluation suite: in-scan metric hooks over a fixed row buffer.
+
+The paper's pitch is *standardized evaluation* (§B): TV/JSD against the true
+R(x)/Z distribution, reward correlations, mode discovery, and log-partition
+bounds.  This module makes those metrics first-class citizens of the compiled
+training stack: an :class:`EvalSuite` is a bundle of evaluator callables that
+:class:`repro.algo.TrainLoop` invokes *inside* its ``lax.scan`` body through a
+``jax.lax.cond`` gate, so periodic evaluation costs zero host round-trips in
+``scan`` / ``vmap_seeds`` modes.
+
+Two invariants make the hook safe to attach to any run:
+
+- **read-only**: evaluators receive the current params and a PRNG key derived
+  by folding the iteration index into the suite's own seed — they never touch
+  the training key stream or the train/sampler carry, so a run with a suite
+  attached produces bitwise-identical training trajectories to one without.
+- **fixed-shape**: metric rows land in a preallocated ``(num_rows,)`` buffer
+  per metric (:class:`MetricsState`), sized from the iteration budget, so the
+  carry pytree structure is static.
+
+Note on ``vmap_seeds``: under ``vmap``, ``lax.cond`` lowers to ``select`` and
+both branches execute each step; the metrics stay correct but the eval cost
+is paid every iteration, so prefer cheap evaluators (or a no-eval run) when
+vectorizing over seeds.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Protocol, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import pytree_dataclass
+
+
+class Evaluator(Protocol):
+    """One metric family: a pure function of ``(key, params)``.
+
+    ``metric_names`` declares the scalar outputs; ``__call__`` must return a
+    dict with exactly those keys, each a float32 scalar, and must be jittable
+    (no host callbacks, no data-dependent shapes).
+    """
+    metric_names: Tuple[str, ...]
+
+    def __call__(self, key: jax.Array, params) -> Dict[str, jax.Array]:
+        ...
+
+
+@pytree_dataclass
+class MetricsState:
+    """Fixed-capacity metric log riding the training-scan carry.
+
+    steps   (R,) int32    iteration at which row r was recorded (-1 = unfilled)
+    values  {name: (R,)}  one float32 buffer per metric (NaN = unfilled)
+    count   ()  int32     number of filled rows
+    """
+    steps: jax.Array
+    values: Dict[str, jax.Array]
+    count: jax.Array
+
+
+class EvalSuite:
+    """A bundle of evaluators run every ``every`` iterations.
+
+    >>> suite = EvalSuite([exact_eval, bounds_eval], every=500)
+    >>> loop = TrainLoop(env, env_params, policy, cfg, evals=suite)
+    >>> state, _ = loop.run(key, 10_000, mode="scan")
+    >>> rows = suite.rows(state.metrics)      # host-side list of dicts
+
+    The suite's PRNG stream is ``fold_in(PRNGKey(seed), iteration)`` — fully
+    determined by (seed, iteration), independent of the training key.
+    """
+
+    def __init__(self, evaluators: Sequence[Evaluator], every: int = 1000,
+                 seed: int = 0):
+        if every <= 0:
+            raise ValueError(f"every must be positive, got {every}")
+        self.evaluators = tuple(evaluators)
+        self.every = int(every)
+        self.seed = int(seed)
+        names: List[str] = []
+        for ev in self.evaluators:
+            for n in ev.metric_names:
+                if n in names:
+                    raise ValueError(f"duplicate metric name {n!r} across "
+                                     "evaluators")
+                names.append(n)
+        self.metric_names: Tuple[str, ...] = tuple(names)
+
+    # -- state ---------------------------------------------------------------
+    def num_rows(self, num_iterations: int) -> int:
+        """Rows recorded over a run: one at every iteration with
+        ``it % every == 0`` for ``it`` in ``[0, num_iterations)``."""
+        if num_iterations <= 0:
+            return 0
+        return (num_iterations - 1) // self.every + 1
+
+    def init_state(self, num_iterations: int) -> MetricsState:
+        R = self.num_rows(num_iterations)
+        return MetricsState(
+            steps=jnp.full((R,), -1, jnp.int32),
+            values={n: jnp.full((R,), jnp.nan, jnp.float32)
+                    for n in self.metric_names},
+            count=jnp.zeros((), jnp.int32))
+
+    # -- evaluation ----------------------------------------------------------
+    def run(self, key: jax.Array, params) -> Dict[str, jax.Array]:
+        """Run every evaluator once; returns ``{name: float32 scalar}``."""
+        out: Dict[str, jax.Array] = {}
+        for i, ev in enumerate(self.evaluators):
+            row = ev(jax.random.fold_in(key, i), params)
+            for n in ev.metric_names:
+                out[n] = jnp.asarray(row[n], jnp.float32)
+        return out
+
+    def record(self, ms: MetricsState, params,
+               iteration: jax.Array) -> MetricsState:
+        """Unconditionally evaluate and append one row at ``iteration``."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), iteration)
+        row = self.run(key, params)
+        i = ms.count
+        return MetricsState(
+            steps=ms.steps.at[i].set(iteration.astype(jnp.int32)),
+            values={n: ms.values[n].at[i].set(row[n])
+                    for n in self.metric_names},
+            count=i + 1)
+
+    def maybe_record(self, ms: MetricsState, params,
+                     iteration: jax.Array) -> MetricsState:
+        """``lax.cond``-gated :meth:`record` at the configured interval."""
+        return jax.lax.cond(
+            iteration % self.every == 0,
+            lambda m: self.record(m, params, iteration),
+            lambda m: m, ms)
+
+    # -- host-side extraction ------------------------------------------------
+    def rows(self, ms: MetricsState) -> List[Dict[str, float]]:
+        """Materialize filled rows as ``[{"step": int, name: float, ...}]``.
+
+        This is the JSON-metrics schema emitted by ``repro.run
+        --metrics-json`` and consumed by ``benchmarks/quality.py``.
+        """
+        import numpy as np
+        if np.ndim(ms.count) > 0:
+            raise ValueError(
+                "per-seed MetricsState (mode='vmap_seeds'): extract one "
+                "seed first, e.g. rows(jax.tree_util.tree_map("
+                "lambda x: x[i], metrics_state))")
+        count = int(ms.count)
+        steps = np.asarray(ms.steps)[:count]
+        values = {n: np.asarray(v)[:count] for n, v in ms.values.items()}
+        return [dict({"step": int(steps[r])},
+                     **{n: float(values[n][r]) for n in self.metric_names})
+                for r in range(count)]

@@ -13,11 +13,24 @@ import jax.numpy as jnp
 
 def empirical_distribution(flat_indices: jax.Array, num_states: int,
                            weights: Optional[jax.Array] = None) -> jax.Array:
-    """Histogram of terminal-state indices -> empirical distribution."""
+    """Histogram of terminal-state indices -> empirical distribution.
+
+    Out-of-range indices are dropped explicitly: XLA's scatter-add silently
+    ignores OOB updates on GPU but *wraps* them on CPU interpret paths, so an
+    unvalidated index would corrupt a different bin depending on backend.  A
+    batch with no in-range weight returns the uniform distribution (a proper
+    distribution, so TV/JSD against it stay finite) instead of all-zeros.
+    """
     w = weights if weights is not None else jnp.ones_like(
         flat_indices, jnp.float32)
-    counts = jnp.zeros((num_states,), jnp.float32).at[flat_indices].add(w)
-    return counts / jnp.maximum(jnp.sum(counts), 1e-9)
+    w = w.astype(jnp.float32)
+    in_range = jnp.logical_and(flat_indices >= 0, flat_indices < num_states)
+    idx = jnp.clip(flat_indices, 0, num_states - 1)
+    counts = jnp.zeros((num_states,), jnp.float32).at[idx].add(
+        jnp.where(in_range, w, 0.0))
+    total = jnp.sum(counts)
+    uniform = jnp.full((num_states,), 1.0 / num_states, jnp.float32)
+    return jnp.where(total > 0, counts / jnp.maximum(total, 1e-9), uniform)
 
 
 def total_variation(p: jax.Array, q: jax.Array) -> jax.Array:
@@ -43,10 +56,33 @@ def pearson_correlation(x: jax.Array, y: jax.Array) -> jax.Array:
     return jnp.sum(x * y) / denom
 
 
+def average_ranks(x: jax.Array) -> jax.Array:
+    """Fractional (average) ranks, 1-based: ties share the mean of the
+    positions they occupy, matching ``scipy.stats.rankdata(method='average')``.
+
+    The double-argsort trick assigns *arbitrary distinct* ranks to tied
+    values (whatever order the stable sort happened to leave them in), which
+    biases Spearman on data with ties — e.g. discretized rewards.
+    """
+    n = x.shape[0]
+    order = jnp.argsort(x)
+    xs = x[order]
+    # run-length decomposition of the sorted values: run_id[i] is the index
+    # of the tie-group that sorted position i belongs to
+    new_run = jnp.concatenate(
+        [jnp.ones((1,), bool), xs[1:] != xs[:-1]])
+    run_id = jnp.cumsum(new_run) - 1
+    pos = jnp.arange(n, dtype=jnp.float32)
+    run_sum = jax.ops.segment_sum(pos, run_id, num_segments=n)
+    run_cnt = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), run_id,
+                                  num_segments=n)
+    ranks_sorted = run_sum[run_id] / jnp.maximum(run_cnt[run_id], 1.0) + 1.0
+    return jnp.zeros((n,), jnp.float32).at[order].set(ranks_sorted)
+
+
 def spearman_correlation(x: jax.Array, y: jax.Array) -> jax.Array:
-    rx = jnp.argsort(jnp.argsort(x)).astype(jnp.float32)
-    ry = jnp.argsort(jnp.argsort(y)).astype(jnp.float32)
-    return pearson_correlation(rx, ry)
+    """Spearman rho = Pearson correlation of average ranks (tie-correct)."""
+    return pearson_correlation(average_ranks(x), average_ranks(y))
 
 
 def log_prob_mc_estimate(key: jax.Array, env, env_params, policy_apply,

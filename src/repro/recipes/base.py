@@ -36,11 +36,13 @@ RECIPES: Dict[str, "Recipe"] = {}
 class RunOptions:
     """Run-scoped knobs resolved from CLI/caller + recipe defaults; passed to
     ``make_config`` so schedules (e.g. exploration annealing) can depend on
-    the actual iteration budget."""
+    the actual iteration budget.  ``eval_batch`` is the sample count handed
+    to sampling evaluators built by ``make_evals``."""
     seed: int = 0
     iterations: int = 20000
     num_envs: int = 16
     eval_every: int = 1000
+    eval_batch: int = 2000
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +53,11 @@ class Recipe:
     make_policy(env)                 -> Policy
     make_config(env, opts)           -> GFNConfig
     make_eval(env, env_params, policy, opts) -> eval_fn(key, params) -> dict
+        Legacy host-callback eval (python mode only).
+    make_evals(env, env_params, policy, opts) -> [Evaluator, ...]
+        Declarative compiled evaluators for :class:`repro.evals.EvalSuite`;
+        these run *inside* the training scan and feed the ``--metrics-json``
+        dump.  When present, the runner prefers them over ``make_eval``.
     run_override(opts, env_overrides, config_overrides, log) -> dict
         Full custom driver for scenarios that are not a plain
         sample->loss->update loop (e.g. EB-GFN's joint EBM training).
@@ -61,6 +68,7 @@ class Recipe:
     make_policy: Optional[Callable[[Any], Any]] = None
     make_config: Optional[Callable[[Any, RunOptions], Any]] = None
     make_eval: Optional[Callable[[Any, Any, Any], Callable]] = None
+    make_evals: Optional[Callable[..., list]] = None
     iterations: int = 20000
     eval_every: int = 1000
     num_envs: int = 16

@@ -10,6 +10,8 @@ from ..core.policies import make_mlp_policy
 from ..core.rollout import forward_rollout
 from ..core.trainer import GFNConfig
 from ..envs.dag import DAGEnvironment
+from ..evals import (LogZBoundsEval, RewardCorrelationEval,
+                     uniform_probe_states)
 from ..metrics.distributions import jensen_shannon
 from ..rewards.bayesnet import (BayesNetRewardModule, enumerate_dags,
                                 exact_posterior)
@@ -55,6 +57,20 @@ def _make_eval(env, env_params, policy, opts, num_samples: int = 4000):
     return eval_fn
 
 
+def _make_evals(env, env_params, policy, opts):
+    """Compiled evaluators: the exact-posterior JSD needs host-side DAG
+    hashing (kept in ``make_eval``); in-scan we track reward correlation
+    over a uniform probe plus the forward log-Z estimates."""
+    probe, probe_log_r = uniform_probe_states(
+        jax.random.PRNGKey(opts.seed + 23), env, env_params, 128,
+        stop_action=env.stop_action)
+    return [
+        RewardCorrelationEval(env, env_params, policy.apply, probe,
+                              probe_log_r, mc_samples=8),
+        LogZBoundsEval(env, env_params, policy.apply, num_samples=256),
+    ]
+
+
 register(Recipe(
     name="dag_mdb",
     description="Modified DB on Bayesian-network structure learning "
@@ -63,6 +79,7 @@ register(Recipe(
     make_policy=_make_policy,
     make_config=_make_config,
     make_eval=_make_eval,
+    make_evals=_make_evals,
     iterations=100000,
     eval_every=2000,
     num_envs=128,

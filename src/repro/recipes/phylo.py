@@ -1,9 +1,14 @@
-"""Phylogenetic-tree generation recipe (paper §B.3): forward-looking DB."""
+"""Phylogenetic-tree generation recipe (paper §B.3): forward-looking DB
+with in-scan reward-correlation evaluation over uniformly sampled trees
+(the paper's Fig. 6 metric)."""
 from __future__ import annotations
+
+import jax
 
 from ..core.policies import make_phylo_policy
 from ..core.trainer import GFNConfig
 from ..envs.phylo import PhyloEnvironment
+from ..evals import RewardCorrelationEval, uniform_probe_states
 from .base import Recipe, register
 
 
@@ -13,6 +18,15 @@ def _make_env(ds: int = 1, reduced: bool = False, seed: int = 0):
         return PhyloEnvironment(n_species=10, n_sites=100, alpha=4.0,
                                 reward_c=100.0, seed=seed)
     return PhyloEnvironment.from_dataset(ds, seed=seed)
+
+
+def _make_evals(env, env_params, policy, opts):
+    # uniform-policy trees span a range of log R (a trained sampler's own
+    # trees have near-identical parsimony, making correlation pure noise)
+    probe, probe_log_r = uniform_probe_states(
+        jax.random.PRNGKey(opts.seed + 23), env, env_params, 64)
+    return [RewardCorrelationEval(env, env_params, policy.apply, probe,
+                                  probe_log_r, mc_samples=8)]
 
 
 register(Recipe(
@@ -27,6 +41,7 @@ register(Recipe(
         objective="fldb", num_envs=opts.num_envs, lr=3e-4,
         exploration_eps=1.0,
         exploration_anneal_steps=opts.iterations // 2),
+    make_evals=_make_evals,
     iterations=100000,
     eval_every=500,
     num_envs=32,

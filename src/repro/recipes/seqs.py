@@ -11,6 +11,8 @@ from ..core.trainer import GFNConfig
 from ..envs.bitseq import BitSeqEnvironment, make_test_set
 from ..envs.sequences import (AMPEnvironment, QM9Environment,
                               TFBind8Environment)
+from ..evals import (LogZBoundsEval, RewardCorrelationEval,
+                     SampledDistributionEval, uniform_probe_states)
 from ..metrics.distributions import (empirical_distribution,
                                      log_prob_mc_estimate,
                                      pearson_correlation, total_variation,
@@ -35,8 +37,10 @@ def _bitseq_config(env, opts):
                      exploration_eps=1e-3)
 
 
-def _bitseq_eval(env, env_params, policy, opts, test_size: int = 128,
-                 mc_samples: int = 10):
+def _bitseq_probe(env, env_params, opts, test_size: int = 128):
+    """Fixed probe of flip-test-set terminals (paper §B.2) as states +
+    log-rewards — shared by the legacy host eval and the compiled
+    correlation evaluator so both score the same probe set."""
     modes = np.asarray(env_params.modes)
     test = make_test_set(opts.seed, modes)
     sel = np.random.RandomState(0).choice(len(test), test_size,
@@ -44,8 +48,13 @@ def _bitseq_eval(env, env_params, policy, opts, test_size: int = 128,
     pw = 2 ** np.arange(env.k - 1, -1, -1)
     words = jnp.asarray(
         (test[sel].reshape(-1, env.L, env.k) * pw).sum(-1), jnp.int32)
-    term = env.terminal_state_from_words(words)
-    log_r = env.log_reward_of_words(words, env_params)
+    return (env.terminal_state_from_words(words),
+            env.log_reward_of_words(words, env_params))
+
+
+def _bitseq_eval(env, env_params, policy, opts, test_size: int = 128,
+                 mc_samples: int = 10):
+    term, log_r = _bitseq_probe(env, env_params, opts, test_size)
 
     def eval_fn(key, params):
         lp = log_prob_mc_estimate(key, env, env_params, policy.apply,
@@ -53,6 +62,16 @@ def _bitseq_eval(env, env_params, policy, opts, test_size: int = 128,
         return {"corr": float(pearson_correlation(lp, log_r))}
 
     return eval_fn
+
+
+def _bitseq_evals(env, env_params, policy, opts):
+    term, log_r = _bitseq_probe(env, env_params, opts)
+    # no EUBO here: exact target samples are infeasible at 2^120 states
+    return [
+        RewardCorrelationEval(env, env_params, policy.apply, term, log_r,
+                              mc_samples=10),
+        LogZBoundsEval(env, env_params, policy.apply, num_samples=128),
+    ]
 
 
 register(Recipe(
@@ -63,6 +82,7 @@ register(Recipe(
     make_policy=_bitseq_policy,
     make_config=_bitseq_config,
     make_eval=_bitseq_eval,
+    make_evals=_bitseq_evals,
     iterations=50000,
     eval_every=1000,
     num_envs=16,
@@ -94,6 +114,29 @@ def _seq_tb_config(env, opts):
                      exploration_anneal_steps=50000)
 
 
+def _enumerable_evals(num_states, num_modes: int = 128):
+    """Compiled evaluators for enumerable sequence envs (TFBind8/QM9):
+    empirical TV/JSD + mode coverage vs the proxy-reward target, reward
+    correlation over a uniform probe, and the forward log-Z estimates."""
+    def make_evals(env, env_params, policy, opts):
+        true = jax.nn.softmax(
+            env.reward_module.true_log_rewards(env_params))
+        modes = jnp.argsort(-true)[:num_modes]
+        probe, probe_log_r = uniform_probe_states(
+            jax.random.PRNGKey(opts.seed + 23), env, env_params, 128)
+        return [
+            SampledDistributionEval(
+                env, env_params, policy.apply,
+                lambda b: env.flatten_index(b.obs[-1]), num_states,
+                true_dist=true, mode_indices=modes,
+                num_samples=opts.eval_batch),
+            RewardCorrelationEval(env, env_params, policy.apply, probe,
+                                  probe_log_r, mc_samples=8),
+            LogZBoundsEval(env, env_params, policy.apply, num_samples=256),
+        ]
+    return make_evals
+
+
 register(Recipe(
     name="qm9_tb",
     description="TB on QM9 small molecules (prepend/append, 11^5 states), "
@@ -104,6 +147,7 @@ register(Recipe(
         num_layers=2, dim=64),
     make_config=_seq_tb_config,
     make_eval=_enumerable_eval(None, 11 ** 5),
+    make_evals=_enumerable_evals(11 ** 5),
     iterations=100000,
     eval_every=2000,
     num_envs=16,
@@ -119,6 +163,7 @@ register(Recipe(
         num_layers=2, dim=64),
     make_config=_seq_tb_config,
     make_eval=_enumerable_eval(None, 4 ** 8),
+    make_evals=_enumerable_evals(4 ** 8),
     iterations=100000,
     eval_every=2000,
     num_envs=16,
@@ -126,6 +171,16 @@ register(Recipe(
 
 
 # -- AMP peptides (§B.2.2) --------------------------------------------------
+
+def _amp_evals(env, env_params, policy, opts):
+    probe, probe_log_r = uniform_probe_states(
+        jax.random.PRNGKey(opts.seed + 23), env, env_params, 64)
+    return [
+        RewardCorrelationEval(env, env_params, policy.apply, probe,
+                              probe_log_r, mc_samples=4),
+        LogZBoundsEval(env, env_params, policy.apply, num_samples=128),
+    ]
+
 
 def _amp_eval(env, env_params, policy, opts, num_samples: int = 256,
               k: int = 100):
@@ -152,6 +207,7 @@ register(Recipe(
         objective="tb", num_envs=opts.num_envs, lr=1e-3, log_z_lr=0.64,
         exploration_eps=1e-2, stop_action=env.stop_action),
     make_eval=_amp_eval,
+    make_evals=_amp_evals,
     iterations=20000,
     eval_every=500,
     num_envs=16,

@@ -19,6 +19,7 @@ from __future__ import annotations
 import argparse
 import ast
 import inspect
+import json
 import sys
 import time
 from typing import Optional
@@ -27,21 +28,55 @@ import jax
 
 from . import recipes
 from .algo import TrainLoop, make_sampler
+from .evals import EvalSuite
 from .recipes.base import RunOptions
+
+#: version of the --metrics-json document layout
+METRICS_SCHEMA_VERSION = 1
+
+
+def dump_metrics_json(path: str, *, recipe: str, opts: RunOptions,
+                      suite: EvalSuite, rows: list) -> dict:
+    """Write the metrics document consumed by ``benchmarks/quality.py``.
+
+    Schema (``schema_version`` 1)::
+
+        {"schema_version": 1, "recipe": str, "seed": int,
+         "iterations": int, "eval_every": int, "eval_batch": int,
+         "metric_names": [str, ...],
+         "rows": [{"step": int, <metric>: float, ...}, ...]}
+    """
+    doc = {"schema_version": METRICS_SCHEMA_VERSION,
+           "recipe": recipe,
+           "seed": opts.seed,
+           "iterations": opts.iterations,
+           "eval_every": opts.eval_every,
+           "eval_batch": opts.eval_batch,
+           "metric_names": list(suite.metric_names),
+           "rows": rows}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return doc
 
 
 def run_recipe(name: str, *, seed: int = 0,
                iterations: Optional[int] = None,
                num_envs: Optional[int] = None,
                eval_every: Optional[int] = None,
+               eval_batch: Optional[int] = None,
                sampler=None, sampler_kwargs: Optional[dict] = None,
                env: Optional[dict] = None, config: Optional[dict] = None,
+               metrics_json: Optional[str] = None,
                log=print) -> dict:
-    """Run a registered recipe; returns ``{recipe, state, history}``.
+    """Run a registered recipe; returns ``{recipe, state, history,
+    metrics}``.
 
     ``env`` overrides are forwarded to the recipe's ``make_env``; ``config``
     overrides are applied with ``GFNConfig._replace``; ``sampler`` is a
-    registry name or a :class:`repro.algo.Sampler` instance.
+    registry name or a :class:`repro.algo.Sampler` instance.  When the
+    recipe declares compiled evaluators (``make_evals``), they run in-scan
+    every ``eval_every`` iterations on ``eval_batch``-sized probes and land
+    in ``out["metrics"]`` (and in the ``metrics_json`` file when given).
     """
     recipe = recipes.get(name)
     opts = RunOptions(
@@ -50,13 +85,18 @@ def run_recipe(name: str, *, seed: int = 0,
         else recipe.iterations,
         num_envs=num_envs if num_envs is not None else recipe.num_envs,
         eval_every=eval_every if eval_every is not None
-        else recipe.eval_every)
+        else recipe.eval_every,
+        eval_batch=eval_batch if eval_batch is not None
+        else RunOptions.eval_batch)
 
     if recipe.run_override is not None:
         if sampler is not None:
             raise ValueError(
                 f"recipe {recipe.name!r} uses a custom training driver; "
                 "--sampler is not supported for it")
+        if metrics_json is not None:
+            log(f"warning: recipe {recipe.name!r} uses a custom training "
+                "driver without an eval suite; --metrics-json is ignored")
         return recipe.run_override(opts, env or {}, config or {}, log)
 
     env_kwargs = dict(env or {})
@@ -73,9 +113,18 @@ def run_recipe(name: str, *, seed: int = 0,
         cfg = cfg._replace(**config)
     smp = make_sampler(sampler if sampler is not None else recipe.sampler,
                        **(sampler_kwargs or {}))
-    loop = TrainLoop(environment, env_params, policy, cfg, sampler=smp)
+
+    suite = None
+    if recipe.make_evals is not None:
+        suite = EvalSuite(
+            recipe.make_evals(environment, env_params, policy, opts),
+            every=opts.eval_every, seed=opts.seed)
+    loop = TrainLoop(environment, env_params, policy, cfg, sampler=smp,
+                     evals=suite)
+    # legacy host-callback eval only when no compiled suite exists — the
+    # suite supersedes it (and evaluating twice doubles the eval cost)
     eval_fn = (recipe.make_eval(environment, env_params, policy, opts)
-               if recipe.make_eval else None)
+               if recipe.make_eval and suite is None else None)
 
     eval_key = jax.random.PRNGKey(opts.seed + 2)
     t0 = time.time()
@@ -96,7 +145,19 @@ def run_recipe(name: str, *, seed: int = 0,
                               opts.iterations, mode="python",
                               callback=callback,
                               callback_every=opts.eval_every)
-    return {"recipe": recipe.name, "state": state, "history": history}
+    out = {"recipe": recipe.name, "state": state, "history": history}
+    if suite is not None:
+        rows = suite.rows(state.metrics)
+        out["metrics"] = rows
+        for row in rows:
+            log("eval it {:6d} ".format(row["step"]) +
+                " ".join(f"{k} {v:9.4f}" for k, v in row.items()
+                         if k != "step"))
+        if metrics_json is not None:
+            dump_metrics_json(metrics_json, recipe=recipe.name, opts=opts,
+                              suite=suite, rows=rows)
+            log(f"wrote metrics JSON -> {metrics_json}")
+    return out
 
 
 def _parse_kv(pairs):
@@ -122,7 +183,13 @@ def main(argv=None) -> int:
     ap.add_argument("--iterations", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--num-envs", type=int, default=None)
-    ap.add_argument("--eval-every", type=int, default=None)
+    ap.add_argument("--eval-every", type=int, default=None,
+                    help="iterations between in-scan evaluation rows")
+    ap.add_argument("--eval-batch", type=int, default=None,
+                    help="sample count for sampling evaluators")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the eval-suite metric rows as JSON "
+                         "(consumed by benchmarks/quality.py)")
     ap.add_argument("--sampler", default=None,
                     choices=["on_policy", "eps_noisy", "replay",
                              "backward_replay"],
@@ -163,9 +230,11 @@ def main(argv=None) -> int:
 
     run_recipe(args.recipe, seed=args.seed, iterations=args.iterations,
                num_envs=args.num_envs, eval_every=args.eval_every,
+               eval_batch=args.eval_batch,
                sampler=args.sampler, sampler_kwargs=sampler_kwargs,
                env=_parse_kv(args.env_overrides),
-               config=_parse_kv(args.config_overrides))
+               config=_parse_kv(args.config_overrides),
+               metrics_json=args.metrics_json)
     return 0
 
 

@@ -343,8 +343,10 @@ class TestRecipes:
         assert out["recipe"] == "hypergrid_tb"
         assert len(out["history"]) == 3                     # it 0, 4, 7
         assert all(np.isfinite(row["loss"]) for row in out["history"])
-        assert "tv" in out["history"][-1]
-        assert len(lines) == 3
+        # compiled eval suite: rows at it 0 and 4 with the exact-DP TV
+        assert [r["step"] for r in out["metrics"]] == [0, 4]
+        assert all(np.isfinite(r["exact_tv"]) for r in out["metrics"])
+        assert len(lines) == 3 + 2                          # history + evals
 
     def test_run_recipe_with_replay_sampler(self):
         from repro.run import run_recipe

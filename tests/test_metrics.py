@@ -1,0 +1,168 @@
+"""Distribution-metric tests (paper §B): closed-form identities for
+TV/JSD/Pearson, tie-correct Spearman ranks, defensive histogramming, and a
+property test that exact-DP and empirical terminal distributions agree
+within sampling error on a tiny hypergrid."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+import repro
+from repro.core.policies import make_mlp_policy
+from repro.core.rollout import forward_rollout
+from repro.evals import make_hypergrid_dp
+from repro.metrics.distributions import (average_ranks,
+                                         empirical_distribution,
+                                         jensen_shannon,
+                                         pearson_correlation,
+                                         spearman_correlation,
+                                         total_variation)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand_dist(key, n):
+    return jax.nn.softmax(jax.random.normal(key, (n,)) * 2.0)
+
+
+# ---------------------------------------------------------------------------
+# TV / JSD closed-form identities
+# ---------------------------------------------------------------------------
+
+class TestDivergences:
+    def test_tv_identity_symmetry_bounds(self):
+        k1, k2 = jax.random.split(KEY)
+        p, q = _rand_dist(k1, 32), _rand_dist(k2, 32)
+        assert float(total_variation(p, p)) == 0.0
+        np.testing.assert_allclose(float(total_variation(p, q)),
+                                   float(total_variation(q, p)), rtol=1e-6)
+        assert 0.0 <= float(total_variation(p, q)) <= 1.0
+        # disjoint supports -> TV = 1
+        a = jnp.array([1.0, 0.0, 0.0, 0.0])
+        b = jnp.array([0.0, 0.0, 0.5, 0.5])
+        np.testing.assert_allclose(float(total_variation(a, b)), 1.0)
+
+    def test_tv_closed_form(self):
+        p = jnp.array([0.5, 0.5, 0.0])
+        q = jnp.array([0.25, 0.25, 0.5])
+        np.testing.assert_allclose(float(total_variation(p, q)), 0.5)
+
+    def test_jsd_identity_symmetry_bounds(self):
+        k1, k2 = jax.random.split(KEY, 2)
+        p, q = _rand_dist(k1, 32), _rand_dist(k2, 32)
+        np.testing.assert_allclose(float(jensen_shannon(p, p)), 0.0,
+                                   atol=1e-7)
+        np.testing.assert_allclose(float(jensen_shannon(p, q)),
+                                   float(jensen_shannon(q, p)), rtol=1e-5)
+        # natural-log JSD is bounded by log 2
+        assert 0.0 <= float(jensen_shannon(p, q)) <= float(np.log(2)) + 1e-6
+
+    def test_jsd_disjoint_supports_is_log2(self):
+        a = jnp.array([1.0, 0.0])
+        b = jnp.array([0.0, 1.0])
+        np.testing.assert_allclose(float(jensen_shannon(a, b)), np.log(2),
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Correlations
+# ---------------------------------------------------------------------------
+
+class TestCorrelations:
+    def test_pearson_is_pm1_on_affine_data(self):
+        x = jax.random.normal(KEY, (64,))
+        np.testing.assert_allclose(
+            float(pearson_correlation(x, 3.0 * x + 2.0)), 1.0, atol=1e-5)
+        np.testing.assert_allclose(
+            float(pearson_correlation(x, -0.5 * x + 1.0)), -1.0, atol=1e-5)
+
+    def test_average_ranks_with_ties(self):
+        r = average_ranks(jnp.array([10.0, 20.0, 20.0, 30.0]))
+        np.testing.assert_allclose(np.asarray(r), [1.0, 2.5, 2.5, 4.0])
+        # all tied -> all share the mean rank
+        r = average_ranks(jnp.zeros((5,)))
+        np.testing.assert_allclose(np.asarray(r), np.full(5, 3.0))
+
+    def test_spearman_tie_handling_regression(self):
+        """Double-argsort assigns arbitrary distinct ranks to ties: for
+        x=[1,1,2], y=[1,2,1] it reported +0.5; average ranks give the
+        correct scipy.stats.spearmanr value of -0.5."""
+        x = jnp.array([1.0, 1.0, 2.0])
+        y = jnp.array([1.0, 2.0, 1.0])
+        np.testing.assert_allclose(float(spearman_correlation(x, y)), -0.5,
+                                   atol=1e-6)
+
+    def test_spearman_perfect_monotone_with_tied_rewards(self):
+        x = jnp.array([1.0, 1.0, 2.0, 3.0])
+        y = jnp.array([5.0, 5.0, 6.0, 7.0])     # same tie structure
+        np.testing.assert_allclose(float(spearman_correlation(x, y)), 1.0,
+                                   atol=1e-6)
+
+    def test_spearman_invariant_to_monotone_transform(self):
+        x = jax.random.normal(KEY, (50,))
+        np.testing.assert_allclose(
+            float(spearman_correlation(x, jnp.exp(x))), 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# empirical_distribution hardening
+# ---------------------------------------------------------------------------
+
+class TestEmpiricalDistribution:
+    def test_basic_histogram(self):
+        d = empirical_distribution(jnp.array([0, 1, 1, 3]), 4)
+        np.testing.assert_allclose(np.asarray(d), [0.25, 0.5, 0.0, 0.25])
+
+    def test_out_of_range_indices_are_dropped(self):
+        """Scatter-add wraps OOB indices on CPU interpret paths (and drops
+        them on GPU) — they must not corrupt other bins."""
+        d = empirical_distribution(jnp.array([0, -1, 4, 100, 1]), 4)
+        np.testing.assert_allclose(np.asarray(d), [0.5, 0.5, 0.0, 0.0])
+        np.testing.assert_allclose(float(jnp.sum(d)), 1.0, rtol=1e-6)
+
+    def test_zero_weight_batch_returns_uniform(self):
+        # all indices OOB
+        d = empirical_distribution(jnp.array([-2, 7]), 4)
+        np.testing.assert_allclose(np.asarray(d), np.full(4, 0.25))
+        # explicit zero weights
+        d = empirical_distribution(jnp.array([0, 1]), 4,
+                                   weights=jnp.zeros(2))
+        np.testing.assert_allclose(np.asarray(d), np.full(4, 0.25))
+        assert np.all(np.isfinite(np.asarray(d)))
+
+    def test_weighted_histogram(self):
+        d = empirical_distribution(jnp.array([0, 2]), 3,
+                                   weights=jnp.array([1.0, 3.0]))
+        np.testing.assert_allclose(np.asarray(d), [0.25, 0.0, 0.75])
+
+
+# ---------------------------------------------------------------------------
+# Property: exact DP vs empirical histogram on a tiny hypergrid
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(dim=st.integers(1, 2), side=st.integers(3, 5),
+       seed=st.integers(0, 1000))
+def test_exact_dp_matches_empirical_within_sampling_error(dim, side, seed):
+    """TV(empirical @ N samples, exact DP) concentrates at
+    O(sqrt(num_states / N)); a randomly initialized policy must land inside
+    a 3x envelope of that rate."""
+    env = repro.HypergridEnvironment(dim=dim, side=side)
+    env_params = env.init(jax.random.PRNGKey(0))
+    pol = make_mlp_policy(env.obs_dim, env.action_dim,
+                          env.backward_action_dim, hidden=(16,))
+    pp = pol.init(jax.random.PRNGKey(seed))
+
+    exact = make_hypergrid_dp(env, env_params, pol.apply)(pp)
+    np.testing.assert_allclose(float(jnp.sum(exact)), 1.0, rtol=1e-5)
+
+    N = 2048
+    batch = forward_rollout(jax.random.PRNGKey(seed + 1), env, env_params,
+                            pol.apply, pp, N)
+    pos = jnp.argmax(batch.obs[-1].reshape(N, dim, side), -1)
+    emp = empirical_distribution(env.flatten_index(pos), side ** dim)
+    tv = float(total_variation(emp, exact))
+    bound = 3.0 * 0.5 * np.sqrt(side ** dim / N)
+    assert tv < bound, (tv, bound)
