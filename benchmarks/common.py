@@ -1,27 +1,74 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, Tuple
+from typing import Callable, Iterable, Optional, Tuple
 
 import jax
 import numpy as np
 
+#: machine-readable perf rows accumulate here (one file, merged by row name
+#: across runs) so the repo carries its own perf trajectory per PR
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results",
+                            "perf.json")
 
-def time_iterations(step_fn: Callable, state, n_iter: int, warmup: int = 3
-                    ) -> Tuple[float, object]:
-    """Returns (iterations/sec, final_state) for a jitted step."""
+
+def time_iterations(step_fn: Callable, state, n_iter: int, warmup: int = 3,
+                    windows: int = 3) -> Tuple[float, object]:
+    """Returns (iterations/sec, final_state) for a jitted step.
+
+    The rate is the median over ``windows`` independent timing windows of
+    ``n_iter`` calls each — one hot window is not a stable estimate on a
+    shared CI machine.
+    """
     for _ in range(warmup):
         state, out = step_fn(state)
     jax.block_until_ready(out)
-    t0 = time.time()
-    for _ in range(n_iter):
-        state, out = step_fn(state)
-    jax.block_until_ready(out)
-    return n_iter / (time.time() - t0), state
+    rates = []
+    for _ in range(max(windows, 1)):
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            state, out = step_fn(state)
+        jax.block_until_ready(out)
+        rates.append(n_iter / (time.perf_counter() - t0))
+    return float(np.median(rates)), state
 
 
 def row(name: str, it_per_s: float, **derived) -> dict:
     d = ";".join(f"{k}={v}" for k, v in derived.items())
     return {"name": name, "us_per_call": 1e6 / it_per_s if it_per_s else 0.0,
+            "it_per_s": it_per_s,
             "derived": f"it_per_s={it_per_s:.1f}" + (";" + d if d else "")}
+
+
+def write_perf_rows(rows: Iterable[dict],
+                    path: Optional[str] = None) -> str:
+    """Merge benchmark rows (by name, latest wins) into the perf-trajectory
+    JSON at ``benchmarks/results/perf.json``.  Schema v1::
+
+        {"schema_version": 1, "updated": <epoch seconds>,
+         "rows": [{"name", "it_per_s", "us_per_call", "derived"}, ...]}
+    """
+    path = path or RESULTS_PATH
+    doc = {"schema_version": 1, "rows": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            if old.get("schema_version") == 1:
+                doc = old
+        except (json.JSONDecodeError, OSError):
+            pass
+    merged = {r["name"]: r for r in doc.get("rows", [])}
+    for r in rows:
+        merged[r["name"]] = {k: r[k] for k in
+                             ("name", "it_per_s", "us_per_call", "derived")
+                             if k in r}
+    doc["rows"] = [merged[k] for k in sorted(merged)]
+    doc["updated"] = int(time.time())
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path

@@ -15,18 +15,22 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale settings (hours); default quick mode")
     ap.add_argument("--only", default=None,
-                    help="run a single suite: table1|fig2|table2|fig3|fig4|"
-                         "fig5|fig6|fig7|table8|roofline|metrics")
+                    help="run a single suite: table1|rollout|fig2|table2|"
+                         "fig3|fig4|fig5|fig6|fig7|table8|roofline|metrics")
+    ap.add_argument("--no-perf-json", action="store_true",
+                    help="skip merging rows into benchmarks/results/"
+                         "perf.json")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="path of a `repro.run --metrics-json` dump for the "
                          "'metrics' suite")
     args = ap.parse_args()
     quick = not args.full
 
-    from . import quality, roofline, table1_throughput
+    from . import quality, roofline, rollout, table1_throughput
 
     suites = {
         "table1": lambda: table1_throughput.run(quick),
+        "rollout": lambda: rollout.run(quick),
         "fig2": lambda: quality.fig2_hypergrid_tv(quick),
         "table2": lambda: quality.table2_hypergrid_sizes(quick),
         "fig3": lambda: quality.fig3_bitseq_correlation(quick),
@@ -47,15 +51,22 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    timed_rows = []
     for tag, fn in suites.items():
         try:
             for r in fn():
                 print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}",
                       flush=True)
+                if r.get("it_per_s"):
+                    timed_rows.append(r)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{tag},0.0,ERROR={type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if timed_rows and not args.no_perf_json:
+        from .common import write_perf_rows
+        path = write_perf_rows(timed_rows)
+        print(f"# wrote {len(timed_rows)} rows to {path}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} suites failed")
 

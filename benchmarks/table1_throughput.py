@@ -42,7 +42,9 @@ def run(quick: bool = True):
                         stop_action=hg.dim)
         rows.append(_bench_env(f"hypergrid20x4_{obj}", hg, pol, cfg, n))
 
-    # Bit sequences (n=120, k=8) — DB / TB (paper rows 4-5)
+    # Bit sequences (n=120, k=8) — DB / TB (paper rows 4-5); the _cached
+    # variant is the same train step with the decode-arch policy, whose
+    # rollout engages the incremental-decode KV cache (ISSUE 3 before/after)
     bs = repro.BitSeqEnvironment(n=120, k=8)
     for obj in ("db", "tb"):
         pol = make_transformer_policy(bs.vocab_size, bs.L, bs.action_dim,
@@ -52,6 +54,13 @@ def run(quick: bool = True):
                         exploration_eps=1e-3)
         rows.append(_bench_env(f"bitseq120_{obj}", bs, pol, cfg,
                                max(n // 2, 10)))
+    pol = make_transformer_policy(bs.vocab_size, bs.L, bs.action_dim,
+                                  bs.backward_action_dim, num_layers=3,
+                                  dim=64, num_heads=8, arch="decode")
+    cfg = GFNConfig(objective="tb", num_envs=16, lr=1e-3,
+                    exploration_eps=1e-3)
+    rows.append(_bench_env("bitseq120_tb_cached", bs, pol, cfg,
+                           max(n // 2, 10)))
 
     # TFBind8 — TB
     tf = repro.TFBind8Environment()

@@ -48,8 +48,9 @@ def make_sampler_train_step(env, env_params, policy, cfg: GFNConfig,
     """
     tx = make_optimizer(cfg)
     loss_fn = make_loss_fn(env, policy.apply, cfg)
-    init_sampler, sample_fn = sampler.build(env, env_params, policy.apply,
-                                            cfg)
+    # samplers get the full Policy (not just .apply): the rollouts they
+    # build engage the KV-cache fast path when the policy + env support it
+    init_sampler, sample_fn = sampler.build(env, env_params, policy, cfg)
 
     def step_fn(state: LoopState
                 ) -> Tuple[LoopState, Tuple[Dict[str, jax.Array], Any]]:
@@ -139,7 +140,10 @@ class TrainLoop:
           ``num_seeds`` axis on every leaf (requires ``num_seeds``).
         """
         if mode == "python":
-            step = jax.jit(self._step_with_eval)
+            # donate the LoopState carry: params/opt/buffer update in place
+            # instead of being copied every iteration (scan mode fuses the
+            # whole run, so only the python driver needs this)
+            step = jax.jit(self._step_with_eval, donate_argnums=0)
             state = self.init(key, num_iterations)
             history = []
             for it in range(num_iterations):

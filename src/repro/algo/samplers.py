@@ -10,7 +10,11 @@ compose with every objective and with the fully-compiled ``lax.scan`` loop.
 Contract
 --------
 ``sampler.build(env, env_params, policy_apply, cfg)`` returns a pair
-``(init_fn, sample_fn)`` of *pure* functions:
+``(init_fn, sample_fn)`` of *pure* functions.  ``policy_apply`` is either a
+bare ``apply(params, obs)`` callable or a full
+:class:`repro.core.policies.Policy` — samplers just forward it to the
+rollouts, which engage the incremental-decode KV-cache fast path when given
+a cache-capable Policy on a supporting env:
 
     init_fn() -> SamplerState
         Constructs the sampler's carried state (an arbitrary fixed-shape

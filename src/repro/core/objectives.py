@@ -99,32 +99,130 @@ def db_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
     return jnp.sum(jnp.square(delta)) / n
 
 
-def subtb_loss(ev: TrajEval, batch: RolloutBatch, lam: float = 0.9
-               ) -> jax.Array:
-    """Subtrajectory Balance, Eq. (5), weights lambda^(k-j), normalized.
+#: beyond this many states the dense (T+1, T+1, B) residual tensor is
+#: skipped in favor of the O(T) prefix recurrence (``impl="auto"``)
+_SUBTB_DENSE_MAX_T1 = 64
 
-    Implemented with prefix sums: with c_t = sum_{u<t}(log_pf - log_pb) and
-    phi_t = log F(s_t) - c_t, the (j,k) residual is phi_j - phi_k.
+
+def _subtb_phi(ev: TrajEval, batch: RolloutBatch):
+    """Flow-corrected potentials phi (T+1, B) and per-trajectory lengths.
+
+    With c_t = sum_{u<t}(log_pf - log_pb) and phi_t = log F(s_t) - c_t, the
+    (j, k) subtrajectory residual is phi_j - phi_k; state t is on the
+    realized trajectory iff t <= n with n = #valid transitions (``valid`` is
+    a True-prefix: once a sub-env terminates it stays terminated).
     """
     T, B = ev.log_pf.shape
     flows = _flow_targets(ev, batch)                       # (T+1, B)
     diffs = ev.log_pf - ev.log_pb                          # (T, B)
     c = jnp.concatenate(
         [jnp.zeros((1, B)), jnp.cumsum(diffs, axis=0)], axis=0)
-    phi = flows - c                                        # (T+1, B)
-    # state t is on the realized trajectory iff t==0 or transition t-1 valid
-    on_traj = jnp.concatenate(
-        [jnp.ones((1, B), bool), batch.valid], axis=0)     # (T+1, B)
-    idx = jnp.arange(T + 1)
+    length = jnp.sum(batch.valid.astype(jnp.int32), axis=0)
+    return flows - c, length
+
+
+def _subtb_dense(phi: jax.Array, length: jax.Array, lam: float) -> jax.Array:
+    """Materialized (T+1, T+1, B) pairwise form — O(T^2 B) memory."""
+    T1, B = phi.shape
+    idx = jnp.arange(T1)
+    on_traj = idx[:, None] <= length[None, :]              # (T+1, B)
     pair_valid = (idx[:, None] < idx[None, :])[..., None]  # j < k
     pair_valid = jnp.logical_and(pair_valid, on_traj[:, None, :])
     pair_valid = jnp.logical_and(pair_valid, on_traj[None, :, :])
     w = lam ** (idx[None, :] - idx[:, None]).astype(jnp.float32)
-    w = jnp.where(pair_valid, w[..., None] if w.ndim == 2 else w, 0.0)
+    w = jnp.where(pair_valid, w[..., None], 0.0)
     resid = phi[:, None, :] - phi[None, :, :]              # (T+1, T+1, B)
     num = jnp.sum(w * jnp.square(resid), axis=(0, 1))
     den = jnp.maximum(jnp.sum(w, axis=(0, 1)), 1e-9)
-    return jnp.mean(num / den)
+    return num / den
+
+
+def _subtb_prefix(phi: jax.Array, length: jax.Array, lam: float) -> jax.Array:
+    """O(T) prefix-sum recurrence over k — no pairwise tensor.
+
+    Expanding sum_{j<k} lam^(k-j) (phi_j - phi_k)^2 per k with the running
+    sums S2_k = sum_{j<k} lam^(k-j) phi_j^2, S1_k (phi_j), W_k (1) — each
+    satisfying X_k = lam * (X_{k-1} + x_{k-1}) — gives
+    num = sum_k S2_k - 2 phi_k S1_k + phi_k^2 W_k over on-trajectory k.
+    """
+    T1, B = phi.shape
+    zeros = jnp.zeros((B,), jnp.float32)
+
+    def step(carry, inp):
+        s2, s1, w, num, den = carry
+        phi_prev, phi_k, on_k = inp
+        s2 = lam * (s2 + jnp.square(phi_prev))
+        s1 = lam * (s1 + phi_prev)
+        w = lam * (w + 1.0)
+        term = s2 - 2.0 * phi_k * s1 + jnp.square(phi_k) * w
+        num = num + jnp.where(on_k, term, 0.0)
+        den = den + jnp.where(on_k, w, 0.0)
+        return (s2, s1, w, num, den), None
+
+    ks = jnp.arange(1, T1)
+    on = ks[:, None] <= length[None, :]                    # (T, B)
+    (_, _, _, num, den), _ = jax.lax.scan(
+        step, (zeros, zeros, zeros, zeros, zeros), (phi[:-1], phi[1:], on))
+    return num / jnp.maximum(den, 1e-9)
+
+
+def _subtb_pallas(phi: jax.Array, length: jax.Array, lam: float) -> jax.Array:
+    """Pallas-kernel forward with a prefix-recurrence backward.
+
+    The tiled kernel (``kernels/subtb_loss.py``) has no VJP of its own, but
+    :func:`_subtb_prefix` computes the identical function with plain jnp
+    ops — so the custom backward differentiates *that*, keeping the loss
+    usable inside ``jax.grad`` (subtb trains through this path on TPU).
+    """
+    from ..kernels.ops import subtb_loss as subtb_kernel
+
+    @jax.custom_vjp
+    def f(p):
+        return subtb_kernel(p.T, length, lam=lam)
+
+    def fwd(p):
+        return f(p), p
+
+    def bwd(p, g):
+        _, vjp_fn = jax.vjp(lambda q: _subtb_prefix(q, length, lam), p)
+        return vjp_fn(g)
+
+    f.defvjp(fwd, bwd)
+    return f(phi)
+
+
+def subtb_loss(ev: TrajEval, batch: RolloutBatch, lam: float = 0.9,
+               impl: str = "auto") -> jax.Array:
+    """Subtrajectory Balance, Eq. (5), weights lambda^(k-j), normalized
+    per trajectory then averaged.
+
+    ``impl`` selects the backend behind the same signature/semantics:
+      - "dense":  materialize the (T+1, T+1, B) residual tensor;
+      - "prefix": O(T)-memory prefix-sum recurrence (equivalent to fp
+        reassociation; see ``tests/test_objectives.py``);
+      - "pallas": the tiled Pallas kernel (``kernels/subtb_loss.py``)
+        forward, prefix-recurrence backward (``jax.grad``-safe);
+      - "auto":   pallas on TPU with compiled lowering enabled
+        (``REPRO_PALLAS_COMPILE=1``), else dense for small T and prefix
+        beyond ``_SUBTB_DENSE_MAX_T1`` states.
+    """
+    from ..kernels.ops import pallas_compiled
+    phi, length = _subtb_phi(ev, batch)
+    if impl == "auto":
+        if jax.default_backend() == "tpu" and pallas_compiled():
+            impl = "pallas"
+        else:
+            impl = "dense" if phi.shape[0] <= _SUBTB_DENSE_MAX_T1 \
+                else "prefix"
+    if impl == "dense":
+        per_traj = _subtb_dense(phi, length, lam)
+    elif impl == "prefix":
+        per_traj = _subtb_prefix(phi, length, lam)
+    elif impl == "pallas":
+        per_traj = _subtb_pallas(phi, length, lam)
+    else:
+        raise ValueError(f"unknown subtb impl {impl!r}")
+    return jnp.mean(per_traj)
 
 
 def fldb_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:

@@ -16,14 +16,32 @@ import jax
 import jax.numpy as jnp
 
 from ..nn.core import (dense_apply, dense_init, embedding_apply,
-                       embedding_init, mlp_apply, mlp_init)
-from ..nn.transformer import (encoder_apply, encoder_init,
+                       embedding_init, mlp_apply, mlp_init, normal_init)
+from ..nn.transformer import (cache_fill, cache_init, decode_encoder_init,
+                              encoder_apply, encoder_apply_bank,
+                              encoder_apply_cached, encoder_init,
+                              encoder_query_cached,
                               positional_embedding_init)
 
 
 class Policy(NamedTuple):
+    """``(init, apply)`` plus optional incremental-decode entry points.
+
+    Policies built with ``arch="decode"`` additionally provide the KV-cache
+    protocol consumed by :func:`repro.core.rollout.forward_rollout`:
+
+      cache_init(params, batch_size)                   -> cache
+      apply_cached(params, cache, token, pos, length,
+                   step=None)                          -> (out, cache)
+      cache_fill(params, cache, tokens)                -> cache  (bulk load)
+      query_cached(params, cache, length)              -> out    (no append)
+    """
     init: Callable
     apply: Callable
+    cache_init: Optional[Callable] = None
+    apply_cached: Optional[Callable] = None
+    cache_fill: Optional[Callable] = None
+    query_cached: Optional[Callable] = None
 
 
 def make_mlp_policy(obs_dim: int, action_dim: int,
@@ -61,33 +79,30 @@ def make_transformer_policy(vocab_size: int, max_len: int, action_dim: int,
                             num_heads: int = 8,
                             learn_backward: bool = False,
                             flow_head: bool = True,
-                            init_log_z: float = 0.0) -> Policy:
+                            init_log_z: float = 0.0,
+                            arch: str = "pooled") -> Policy:
     """Transformer policy over integer token observations (paper bitseq/AMP:
-    3 layers, 8 heads, dim 64).  Mean-pools the encoding and emits all heads
-    from one readout (position-wise actions get their logits from per-token
-    readouts concatenated with the pooled summary).
+    3 layers, 8 heads, dim 64).
+
+    ``arch="pooled"`` (default, the seed architecture): bidirectional encoder
+    over the padded sequence, mean-pooled readout.  ``arch="decode"``: the
+    incremental-decode latent-query architecture (see
+    ``nn.transformer.decode_encoder_init``) — per-layer K/V from frozen
+    token+position embeddings, a learned latent query reads the state out.
+    It is a pure function of the observation's (token, position) set, so
+    stored observations stay valid for teacher forcing and DP evals, and it
+    exposes the KV-cache entry points that let
+    :func:`repro.core.rollout.forward_rollout` skip re-encoding the full
+    sequence at every step.  The pad/empty token is assumed to be
+    ``vocab_size - 1`` (true for every sequence env in this repo).
     """
+    if arch not in ("pooled", "decode"):
+        raise ValueError(f"unknown transformer arch {arch!r}")
+    heads = action_dim + (backward_action_dim if learn_backward else 0) \
+        + (1 if flow_head else 0)
+    pad_id = vocab_size - 1
 
-    def init(key):
-        ks = jax.random.split(key, 4)
-        heads = action_dim + (backward_action_dim if learn_backward else 0) \
-            + (1 if flow_head else 0)
-        return {
-            "embed": embedding_init(ks[0], vocab_size, dim),
-            "pos": positional_embedding_init(ks[1], max_len, dim),
-            "encoder": encoder_init(ks[2], num_layers=num_layers, dim=dim,
-                                    num_heads=num_heads),
-            "readout": dense_init(ks[3], dim, heads),
-            "log_z": jnp.zeros((), jnp.float32) + init_log_z,
-        }
-
-    def apply(params, tokens):
-        tokens = tokens.astype(jnp.int32)
-        x = embedding_apply(params["embed"], tokens)
-        x = x + params["pos"]["pos"][None, :tokens.shape[1]]
-        h = encoder_apply(params["encoder"], x, num_heads=num_heads)
-        pooled = jnp.mean(h, axis=1)
-        out = dense_apply(params["readout"], pooled)
+    def heads_out(out):
         res = {"logits": out[..., :action_dim]}
         off = action_dim
         if learn_backward:
@@ -97,7 +112,90 @@ def make_transformer_policy(vocab_size: int, max_len: int, action_dim: int,
             res["log_flow"] = out[..., off]
         return res
 
-    return Policy(init, apply)
+    if arch == "pooled":
+        def init(key):
+            ks = jax.random.split(key, 4)
+            return {
+                "embed": embedding_init(ks[0], vocab_size, dim),
+                "pos": positional_embedding_init(ks[1], max_len, dim),
+                "encoder": encoder_init(ks[2], num_layers=num_layers,
+                                        dim=dim, num_heads=num_heads),
+                "readout": dense_init(ks[3], dim, heads),
+                "log_z": jnp.zeros((), jnp.float32) + init_log_z,
+            }
+
+        def apply(params, tokens):
+            tokens = tokens.astype(jnp.int32)
+            x = embedding_apply(params["embed"], tokens)
+            x = x + params["pos"]["pos"][None, :tokens.shape[1]]
+            h = encoder_apply(params["encoder"], x, num_heads=num_heads)
+            pooled = jnp.mean(h, axis=1)
+            return heads_out(dense_apply(params["readout"], pooled))
+
+        return Policy(init, apply)
+
+    # -- arch == "decode" ---------------------------------------------------
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": embedding_init(ks[0], vocab_size, dim),
+            "pos": positional_embedding_init(ks[1], max_len, dim),
+            "bos": normal_init(ks[2], (dim,), std=0.02),
+            "decoder": decode_encoder_init(ks[3], num_layers=num_layers,
+                                           dim=dim, num_heads=num_heads),
+            "readout": dense_init(ks[4], dim, heads),
+            "log_z": jnp.zeros((), jnp.float32) + init_log_z,
+        }
+
+    def _embed(params, tokens, pos):
+        return (embedding_apply(params["embed"], tokens)
+                + embedding_apply({"table": params["pos"]["pos"]},
+                                  jnp.clip(pos, 0, max_len - 1)))
+
+    def apply(params, tokens):
+        tokens = tokens.astype(jnp.int32)
+        B, S = tokens.shape
+        xs = _embed(params, tokens, jnp.arange(S)[None, :])
+        bos = jnp.broadcast_to(params["bos"][None, None, :], (B, 1, dim))
+        xs = jnp.concatenate([bos, xs], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones((B, 1), bool), tokens != pad_id], axis=1)
+        h = encoder_apply_bank(params["decoder"], xs, mask,
+                               num_heads=num_heads)
+        return heads_out(dense_apply(params["readout"], h))
+
+    def cache_init_fn(params, batch_size):
+        x0 = jnp.broadcast_to(params["bos"][None, :], (batch_size, dim))
+        return cache_init(params["decoder"], x0, max_len + 1,
+                          num_heads=num_heads)
+
+    def apply_cached(params, cache, token, pos, length, step=None):
+        x_new = _embed(params, token.astype(jnp.int32), pos)
+        # token added at scan step t-1 lives in slot t (uniform across the
+        # batch; see nn.transformer.cache_append).  step=None falls back to
+        # the max per-env length, correct when all envs fill in lockstep.
+        slot = jnp.max(length) if step is None else step
+        slot = jnp.clip(slot, 1, max_len)
+        y, cache = encoder_apply_cached(params["decoder"], x_new, cache,
+                                        length, num_heads=num_heads,
+                                        slot=slot)
+        return heads_out(dense_apply(params["readout"], y)), cache
+
+    def cache_fill_fn(params, cache, tokens):
+        tokens = tokens.astype(jnp.int32)
+        S = tokens.shape[1]
+        xs = _embed(params, tokens, jnp.arange(S)[None, :])
+        return cache_fill(params["decoder"], cache, xs, num_heads=num_heads)
+
+    def query_cached(params, cache, length):
+        y = encoder_query_cached(params["decoder"], cache, length,
+                                 num_heads=num_heads)
+        return heads_out(dense_apply(params["readout"], y))
+
+    return Policy(init, apply, cache_init=cache_init_fn,
+                  apply_cached=apply_cached, cache_fill=cache_fill_fn,
+                  query_cached=query_cached)
 
 
 def make_phylo_policy(env, num_layers: int = 6, dim: int = 32,

@@ -8,10 +8,44 @@ terminal ones and ``env.step`` replaced by ``env.backward_step`` (paper §2).
 Trajectories store observations + masks + actions so that objectives can
 re-evaluate the policy differentiably (teacher forcing) both on-policy and
 from a replay buffer.
+
+Incremental-decode fast path (cache-in-carry design)
+----------------------------------------------------
+Sequence policies re-encoding the full padded (B, L) observation at every one
+of T scan steps pay O(T * L) encoder work per trajectory where an
+incremental decoder needs O(L) total.  When the environment implements the
+incremental-observation protocol (``env.supports_incremental_obs`` +
+``env.observe_last``) and the policy exposes KV-cache entry points
+(``Policy.apply_cached`` etc., built by ``make_transformer_policy(...,
+arch="decode")``), :func:`forward_rollout` threads a per-layer K/V cache
+through the scan carry instead of re-encoding:
+
+  carry = (env_state, kv_cache, prev_action)
+
+At each step ``env.observe_last(state, params, prev_action)`` names the one
+observation entry the previous transition added — ``(token, position,
+length)`` — the policy appends that entry's per-layer K/V at the scan
+step's cache slot (slot 0 holds a learned BOS entry; the token added at
+step t-1 lands in slot t, a batch-uniform scalar index, so the append is a
+cheap ``dynamic_update_slice``; stopped/terminal envs deposit garbage at
+slots their per-env ``length`` mask never reaches) and answers the policy
+query from the cache.  Everything else — masks,
+sampling, the stored :class:`RolloutBatch` — is byte-compatible with the
+uncached path, so objectives, samplers, and evals are unchanged, and cached
+vs. uncached rollouts agree to fp32 tolerance (see
+``tests/test_rollout_cache.py``).
+
+Backward rollouts reuse the same machinery where the edit regime allows
+(``env.incremental_pop_only``: backward steps only ever remove the newest
+token): the cache is built *once* from the terminal sequence with
+``Policy.cache_fill`` and every per-step policy apply becomes a cache query
+with a shrinking length mask — no carry needed since the cache is read-only
+there.  Envs with arbitrary-position backward edits (bitseq) keep the full
+re-encode on the backward path.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +54,32 @@ from ..envs.base import Environment
 from .types import masked_logprobs, pytree_dataclass, sample_masked
 
 PolicyApply = Callable[[Any, jax.Array], Dict[str, jax.Array]]
+
+
+def _policy_entry(policy_apply):
+    """Accept a bare ``apply(params, obs)`` callable or a
+    :class:`repro.core.policies.Policy`; returns ``(policy_or_None,
+    apply_fn)``."""
+    if hasattr(policy_apply, "apply") and hasattr(policy_apply,
+                                                  "apply_cached"):
+        return policy_apply, policy_apply.apply
+    return None, policy_apply
+
+
+def _cache_engaged(env: Environment, policy, use_cache) -> bool:
+    """Resolve the ``use_cache`` flag against env + policy capabilities."""
+    capable = (policy is not None and policy.apply_cached is not None
+               and getattr(env, "supports_incremental_obs", False))
+    if use_cache == "auto":
+        return capable
+    if use_cache and not capable:
+        raise ValueError(
+            "use_cache=True needs a policy with cache entry points (built "
+            "with make_transformer_policy(..., arch='decode')) and an env "
+            "with supports_incremental_obs; got "
+            f"policy={'cached-capable' if policy is not None and policy.apply_cached else 'plain apply'}, "
+            f"env={type(env).__name__}")
+    return bool(use_cache)
 
 
 @pytree_dataclass
@@ -81,20 +141,36 @@ def concat_rollout_batches(a: RolloutBatch, b: RolloutBatch) -> RolloutBatch:
 
 
 def forward_rollout(key: jax.Array, env: Environment, env_params,
-                    policy_apply: PolicyApply, policy_params,
+                    policy_apply: Union[PolicyApply, Any], policy_params,
                     num_envs: int, *, exploration_eps: jax.Array | float = 0.0,
                     num_steps: Optional[int] = None,
-                    return_final_state: bool = False):
+                    return_final_state: bool = False,
+                    use_cache: Union[bool, str] = "auto"):
+    """Sample ``num_envs`` trajectories; ``policy_apply`` may be a bare
+    ``apply(params, obs)`` callable or a full
+    :class:`repro.core.policies.Policy` — passing the latter enables the
+    incremental-decode fast path (see module docstring) when both the
+    policy and the environment support it.  ``use_cache``: "auto" (engage
+    when supported), True (require), or False (force full re-encode)."""
+    policy, apply_fn = _policy_entry(policy_apply)
+    cached = _cache_engaged(env, policy, use_cache)
     T = num_steps if num_steps is not None else env.max_steps
     obs0, state0 = env.reset(num_envs, env_params)
 
-    def step_fn(carry, key_t):
-        state = carry
+    def step_fn(carry, xs):
+        key_t, t = xs
+        state, cache, prev_action = carry
         obs = env.observe(state, env_params)
         fmask = env.forward_mask(state, env_params)
         bmask = env.backward_mask(state, env_params)
         was_done = env.is_terminal(state, env_params)
-        out = policy_apply(policy_params, obs)
+        if cached:
+            token, pos, length = env.observe_last(state, env_params,
+                                                  prev_action)
+            out, cache = policy.apply_cached(policy_params, cache, token,
+                                             pos, length, step=t)
+        else:
+            out = apply_fn(policy_params, obs)
         # terminal no-op environments keep a legal dummy action (argmax mask)
         safe_mask = jnp.where(was_done[:, None],
                               jnp.ones_like(fmask), fmask)
@@ -109,10 +185,14 @@ def forward_rollout(key: jax.Array, env: Environment, env_params,
                   valid=jnp.logical_not(was_done), done=was_done,
                   log_r=log_r, log_r_state=lrs, energy=en,
                   log_pf_beh=jnp.where(was_done, 0.0, log_pf))
-        return nstate, ys
+        return (nstate, cache, actions), ys
 
+    cache0 = policy.cache_init(policy_params, num_envs) if cached else ()
+    prev0 = jnp.zeros((num_envs,), jnp.int32)
     keys = jax.random.split(key, T)
-    final_state, ys = jax.lax.scan(step_fn, state0, keys)
+    (final_state, _, _), ys = jax.lax.scan(
+        step_fn, (state0, cache0, prev0),
+        (keys, jnp.arange(T, dtype=jnp.int32)))
 
     obs_f = env.observe(final_state, env_params)
     fmask_f = env.forward_mask(final_state, env_params)
@@ -146,12 +226,14 @@ class BackwardRollout(NamedTuple):
 
 
 def backward_rollout(key: jax.Array, env: Environment, env_params,
-                     policy_apply: PolicyApply, policy_params,
+                     policy_apply: Union[PolicyApply, Any], policy_params,
                      terminal_state, *, collect: bool = False,
                      backward_policy: str = "learned",
                      known_log_reward: Optional[jax.Array] = None,
                      with_log_pf: bool = True,
-                     num_steps: Optional[int] = None) -> BackwardRollout:
+                     num_steps: Optional[int] = None,
+                     use_cache: Union[bool, str] = "auto"
+                     ) -> BackwardRollout:
     """Sample tau ~ P_B(.|x) from given terminal states; return log P_F(tau)
     and log P_B(tau|x) — the Monte-Carlo estimator of the paper's
     P_hat_theta(x) uses exactly these (paper §B.2).
@@ -172,8 +254,37 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
     (``log_pf``/``log_pf_beh`` come back as zeros) — replay samplers only
     consume ``.batch`` and the objectives teacher-force the policy on it
     anyway, so this halves the policy applies on the replay hot path.
+
+    When ``policy_apply`` is a cache-capable Policy and the env's backward
+    edit regime is pop-only (``env.incremental_pop_only``), the per-step
+    policy applies become queries against a KV cache built once from the
+    terminal sequences (module docstring) — ``use_cache`` as in
+    :func:`forward_rollout`.
     """
     T = num_steps if num_steps is not None else env.max_steps
+    policy, apply_fn = _policy_entry(policy_apply)
+    needs_policy = with_log_pf or backward_policy != "uniform"
+    cached = (_cache_engaged(env, policy, use_cache) and needs_policy
+              and getattr(env, "incremental_pop_only", False)
+              and policy.cache_fill is not None)
+    if use_cache is True and not cached:
+        raise ValueError(
+            "use_cache=True on backward_rollout needs a pop-only edit "
+            "regime (env.incremental_pop_only), a policy with cache_fill, "
+            "and at least one per-step policy evaluation (with_log_pf or a "
+            f"learned backward policy); got env={type(env).__name__}, "
+            f"with_log_pf={with_log_pf}, backward_policy={backward_policy!r}")
+    if cached:
+        term_cache = policy.cache_fill(
+            policy_params, policy.cache_init(policy_params,
+                                             terminal_state.steps.shape[0]),
+            env.observe(terminal_state, env_params))
+
+    def policy_out(state):
+        if cached:
+            _, _, length = env.observe_last(state, env_params)
+            return policy.query_cached(policy_params, term_cache, length)
+        return apply_fn(policy_params, env.observe(state, env_params))
 
     def step_fn(carry, key_t):
         state, acc_pf, acc_pb = carry
@@ -183,7 +294,7 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
         if backward_policy == "uniform":
             logits_b = jnp.zeros_like(bmask, jnp.float32)
         else:
-            out = policy_apply(policy_params, obs)
+            out = policy_out(state)
             logits_b = out.get("logits_b")
             if logits_b is None:
                 logits_b = jnp.zeros_like(bmask, jnp.float32)
@@ -195,7 +306,7 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
         fmask_prev = env.forward_mask(prev_state, env_params)
         live = jnp.logical_not(at_init)
         if with_log_pf:
-            prev_out = policy_apply(policy_params, prev_obs)
+            prev_out = policy_out(prev_state)
             logp_f_all = masked_logprobs(prev_out["logits"], fmask_prev)
             log_pf = jnp.take_along_axis(logp_f_all, fwd_a[:, None],
                                          axis=-1)[:, 0]

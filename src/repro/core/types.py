@@ -96,10 +96,17 @@ def sample_masked(key: jax.Array, logits: jax.Array, mask: jax.Array,
     logp = masked_logprobs(logits, mask)
     key_u, key_c, key_m = jax.random.split(key, 3)
     sampled = jax.random.categorical(key_c, logp, axis=-1)
-    # epsilon-uniform over legal actions
-    unif_logits = jnp.where(mask, 0.0, -jnp.inf)
-    uniform = jax.random.categorical(key_u, unif_logits, axis=-1)
-    take_unif = jax.random.uniform(key_m, sampled.shape) < eps
-    actions = jnp.where(take_unif, uniform, sampled)
+    if isinstance(eps, (int, float)) and eps == 0.0:
+        # statically-zero exploration: skip the epsilon-uniform machinery
+        # (a second categorical + uniform per step on the rollout hot path).
+        # The key-split structure above is kept, so trajectories are
+        # bit-identical to the eps-annealed-to-zero path.
+        actions = sampled
+    else:
+        # epsilon-uniform over legal actions
+        unif_logits = jnp.where(mask, 0.0, -jnp.inf)
+        uniform = jax.random.categorical(key_u, unif_logits, axis=-1)
+        take_unif = jax.random.uniform(key_m, sampled.shape) < eps
+        actions = jnp.where(take_unif, uniform, sampled)
     logp_a = jnp.take_along_axis(logp, actions[..., None], axis=-1)[..., 0]
     return actions, logp_a

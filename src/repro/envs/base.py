@@ -45,6 +45,39 @@ class Environment(abc.ABC):
     #: maximum trajectory length (number of forward steps incl. stop)
     max_steps: int
 
+    # -- incremental observation protocol (rollout KV-cache fast path) ------
+    #: True when each forward step changes the observation by at most one
+    #: token, exposed through :meth:`observe_last` — lets
+    #: ``core.rollout.forward_rollout`` thread a policy KV cache through the
+    #: scan carry instead of re-encoding the full padded observation at
+    #: every step.
+    supports_incremental_obs: bool = False
+    #: True when *backward* steps only ever remove the most recently added
+    #: token (autoregressive pop / un-stop) — the regime where a cache built
+    #: once from the terminal sequence serves every backward policy apply.
+    #: False for envs whose backward actions remove arbitrary tokens
+    #: (e.g. bitseq), where cache slots cannot be masked contiguously.
+    incremental_pop_only: bool = False
+
+    def observe_last(self, state: EnvState, params: EnvParams,
+                     last_action: jax.Array = None
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Newest token of the current observation: ``(token, position,
+        length)``, each (B,) int32.
+
+        ``token``/``position`` identify the single observation entry added
+        by the most recent forward step (arbitrary but in-range values are
+        fine when ``length == 0`` or the last step added nothing — the
+        rollout masks those cache appends); ``length`` is the number of
+        tokens present in the observation.  ``last_action`` is the forward
+        action that produced ``state`` (the rollout threads it through its
+        scan carry) — needed by envs whose writes land at action-dependent
+        positions (bitseq) and ignored by strictly appending ones.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement the incremental "
+            "observation protocol")
+
     # -- setup -------------------------------------------------------------
     @abc.abstractmethod
     def init(self, key: jax.Array) -> EnvParams:

@@ -77,6 +77,10 @@ class BitSeqEnvironment(Environment):
     """Non-autoregressive bit-sequence generation."""
 
     all_states_terminal = False
+    # forward steps write exactly one word (at an arbitrary position);
+    # backward steps remove arbitrary positions, so no pop-only cache reuse.
+    supports_incremental_obs = True
+    incremental_pop_only = False
 
     def __init__(self, n: int = 120, k: int = 8, beta: float = 3.0,
                  num_modes: int = 60, seed: int = 0):
@@ -159,6 +163,17 @@ class BitSeqEnvironment(Environment):
         b = jnp.arange(bwd_action.shape[0])
         word = state.tokens[b, bwd_action]
         return bwd_action * self.m + word
+
+    def observe_last(self, state, params, last_action=None):
+        # the written position is not recoverable from the state alone
+        # (writes land anywhere); the rollout threads the producing action
+        # through its scan carry instead.
+        if last_action is None:
+            raise ValueError("BitSeqEnvironment.observe_last needs the "
+                             "forward action that produced `state`")
+        pos = (last_action // self.m).astype(jnp.int32)
+        b = jnp.arange(state.steps.shape[0])
+        return state.tokens[b, pos], pos, state.steps
 
     def terminal_state_from_words(self, words: jax.Array) -> BitSeqState:
         B = words.shape[0]

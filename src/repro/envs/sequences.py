@@ -35,6 +35,9 @@ class AutoregressiveEnvironment(Environment):
     Backward is degenerate (remove last symbol): 1 structural action.
     """
 
+    supports_incremental_obs = True
+    incremental_pop_only = True
+
     def __init__(self, reward_module, length: int, vocab: int):
         self.reward_module = reward_module
         self.length = length
@@ -95,6 +98,11 @@ class AutoregressiveEnvironment(Environment):
         b = jnp.arange(bwd_action.shape[0])
         return state.tokens[b, prev_state.length]
 
+    def observe_last(self, state, params, last_action=None):
+        b = jnp.arange(state.length.shape[0])
+        idx = jnp.maximum(state.length - 1, 0)
+        return state.tokens[b, idx], idx, state.length
+
     def terminal_state_from_tokens(self, tokens: jax.Array) -> SeqState:
         B = tokens.shape[0]
         return SeqState(tokens=tokens.astype(jnp.int32),
@@ -129,6 +137,9 @@ class VariableLengthSeqEnvironment(Environment):
     Backward actions mirror forward: "remove last symbol" (structural,
     1 action) + "un-stop" (last index).
     """
+
+    supports_incremental_obs = True
+    incremental_pop_only = True
 
     def __init__(self, reward_module, max_len: int, vocab: int,
                  min_len: int = 1):
@@ -217,6 +228,13 @@ class VariableLengthSeqEnvironment(Environment):
         sym = state.tokens[b, jnp.maximum(state.length - 1, 0)]
         return jnp.where(bwd_action == 1, self.stop_action, sym)
 
+    def observe_last(self, state, params, last_action=None):
+        # a stop step adds no token: length is unchanged, so the cache
+        # append re-writes the previous newest token's slot (idempotent).
+        b = jnp.arange(state.length.shape[0])
+        idx = jnp.maximum(state.length - 1, 0)
+        return state.tokens[b, idx], idx, state.length
+
     def terminal_state_from_tokens(self, tokens, lengths):
         B = tokens.shape[0]
         return SeqState(tokens=tokens.astype(jnp.int32),
@@ -253,6 +271,11 @@ class PrependAppendEnvironment(Environment):
     """Fixed-length prepend/append generation (paper QM9 formulation):
     2m actions = m appends + m prepends; terminal at ``length`` symbols.
     Backward structural actions: {remove-front, remove-back}.
+
+    No incremental-observation support: the observation is *left-aligned*,
+    so a prepend shifts every existing token's position by one — more than
+    one observation entry changes per step and cached per-position K/V
+    entries would all be invalidated.
     """
 
     def __init__(self, reward_module, length: int, vocab: int):

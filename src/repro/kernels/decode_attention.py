@@ -1,0 +1,110 @@
+"""Pallas TPU kernel for single-query (incremental-decode) attention.
+
+The KV-cached rollout fast path issues one query per environment per step
+against a growing per-layer K/V cache (``core/rollout.py``'s cache-in-carry
+design).  That access pattern — q: (B, H, D) single rows, k/v: (B, S, H, D)
+cache slots, a per-batch valid-slot count — is exactly the "decode" shape of
+LLM inference kernels, so the same TPU mapping applies:
+
+  grid = (B, H, n_kv_blocks) with the kv axis innermost *sequential*; each
+  (b, h) program streams (block_k x head_dim) K/V tiles HBM -> VMEM while the
+  running-softmax state (m, l, acc) lives in VMEM scratch across kv steps.
+  Slots at or beyond ``kv_valid[b]`` are masked with -1e30 before the
+  streaming max/sum update, so cache capacity can exceed the live prefix.
+
+Validated on CPU in interpret mode against
+``kernels.ref.ref_decode_attention`` (the real-hardware path is identical
+modulo ``interpret=``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, block_k: int, sm_scale: float, n_kv: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)             # (block_k, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    kv_valid = len_ref[0]
+
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (1, block_k), 1)
+    s = (q @ k.T) * sm_scale                        # (1, block_k)
+    s = jnp.where(k_pos < kv_valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = corr * acc_scr[...] + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            kv_valid: jax.Array, *, block_k: int = 128,
+                            interpret: bool = True) -> jax.Array:
+    """q: (B, H, D); k/v: (B, S, H, D); kv_valid: (B,) valid slot counts.
+
+    Returns (B, H, D).  The cache axis is padded to a ``block_k`` multiple
+    internally; padded slots are masked by the valid-count check.
+    ``interpret=True`` executes on CPU for validation; on a real TPU pass
+    ``interpret=False``.
+    """
+    B, S, H, D = k.shape
+    block_k = min(block_k, max(S, 8))
+    pad_k = (-S) % block_k
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    n_kv = k.shape[1] // block_k
+
+    # (B, H, 1, d) query rows; (B, H, S, d) cache tiles
+    qt = q[:, :, None, :]
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               sm_scale=1.0 / (D ** 0.5), n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ik: (b,)),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),    # running max m
+            pltpu.VMEM((1, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((1, D), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(kv_valid.astype(jnp.int32), qt, kt, vt)
+
+    return out[:, :, 0, :]

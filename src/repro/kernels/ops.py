@@ -13,11 +13,19 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .decode_attention import decode_attention_pallas
 from .flash_attention import flash_attention_pallas
 from .rwkv6_scan import rwkv6_scan_pallas
 from .subtb_loss import subtb_loss_pallas
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def pallas_compiled() -> bool:
+    """True when the kernels lower through Mosaic (REPRO_PALLAS_COMPILE=1)
+    rather than the interpreter — hot-path callers should only prefer a
+    kernel over their jnp fallback when this holds."""
+    return not _INTERPRET
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "kv_len",
@@ -30,6 +38,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   kv_len=kv_len, block_q=block_q,
                                   block_k=block_k, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_valid: jax.Array, *, block_k: int = 128) -> jax.Array:
+    """Single-query decode attention against a KV cache.
+
+    q: (B, H, D); k/v: (B, S, H, D); kv_valid: (B,) valid slot counts."""
+    return decode_attention_pallas(q, k, v, kv_valid, block_k=block_k,
+                                   interpret=_INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -38,6 +38,25 @@ def ref_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.astype(q.dtype)
 
 
+def ref_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_valid: jax.Array) -> jax.Array:
+    """Single-query (incremental-decode) attention against a KV cache.
+
+    q: (B, H, D) one query per sequence; k/v: (B, S, H, D) cache slots;
+    kv_valid: (B,) number of valid leading slots (mask = slot < kv_valid).
+    Returns (B, H, D).  This is the oracle for
+    ``kernels.decode_attention.decode_attention_pallas``.
+    """
+    B, S, H, D = k.shape
+    logits = jnp.einsum('bhd,bshd->bhs', q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(D)
+    mask = jnp.arange(S)[None, :] < kv_valid[:, None]          # (B, S)
+    logits = jnp.where(mask[:, None, :], logits, -1e30)
+    a = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum('bhs,bshd->bhd', a, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def ref_rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
               u: Optional[jax.Array] = None,
               state: Optional[jax.Array] = None

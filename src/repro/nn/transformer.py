@@ -72,3 +72,213 @@ def encoder_apply(p: Params, x: jax.Array, *, num_heads: int,
 def positional_embedding_init(key: jax.Array, max_len: int, dim: int,
                               dtype=jnp.float32) -> Params:
     return {"pos": normal_init(key, (max_len, dim), std=0.02, dtype=dtype)}
+
+
+# ===========================================================================
+# Incremental-decode (latent-query) encoder with a per-layer KV cache
+# ===========================================================================
+#
+# The rollout fast path needs a policy whose per-step cost does not re-encode
+# the whole padded sequence.  A standard causal self-attention KV cache is
+# only exact for strictly left-to-right generation; GFlowNet sequence envs
+# also write tokens at *arbitrary* positions (bitseq) — so each layer here
+# computes K/V from the token's frozen input embedding (token + position)
+# alone, while a learned latent query evolves through the layer stack and
+# cross-attends to the cache.  Consequences:
+#
+#  - appending one token's K/V per layer is *exact*: an entry never depends
+#    on the rest of the sequence, so insertion order cannot invalidate it;
+#  - the output is a function of the *set* of (token, position) pairs, i.e.
+#    of the spatial observation — teacher-forcing objectives, replay, and
+#    the exact-DP evaluators keep working off stored observations;
+#  - the full (uncached) pass and the cached pass are the same math, so
+#    cached rollouts match uncached ones to fp tolerance.
+#
+# Layout: cache slot 0 holds a learned BOS entry (so the empty state still
+# has something to attend to); the token appended at generation step i lands
+# in slot i+1.  Queries mask slots > current length.
+
+
+def decode_encoder_init(key: jax.Array, *, num_layers: int, dim: int,
+                        num_heads: int, ff_dim: Optional[int] = None,
+                        dtype=jnp.float32) -> Params:
+    """Latent-query decoder stack: per layer, q projection of the evolving
+    query state + K/V projections of frozen token embeddings + GELU MLP,
+    pre-LayerNorm on the query path (mirrors :func:`encoder_init`)."""
+    ff_dim = ff_dim if ff_dim is not None else 4 * dim
+    keys = jax.random.split(key, num_layers + 1)
+    layers: Params = {}
+    for i, k in enumerate(keys[:-1]):
+        ks = jax.random.split(k, 5)
+        layers[f"layer_{i}"] = {
+            "ln1": layernorm_init(dim, dtype),
+            "q": dense_init(ks[0], dim, dim, dtype=dtype),
+            "kv": dense_init(ks[1], dim, 2 * dim, dtype=dtype),
+            "proj": dense_init(ks[2], dim, dim, dtype=dtype),
+            "ln2": layernorm_init(dim, dtype),
+            "ff1": dense_init(ks[3], dim, ff_dim, dtype=dtype),
+            "ff2": dense_init(ks[4], ff_dim, dim, dtype=dtype),
+        }
+    layers["ln_f"] = layernorm_init(dim, dtype)
+    layers["q0"] = normal_init(keys[-1], (dim,), std=0.02, dtype=dtype)
+    return layers
+
+
+def _num_layers(p: Params) -> int:
+    return sum(1 for k in p if k.startswith("layer_"))
+
+
+def _kv_heads(lp: Params, x: jax.Array, num_heads: int):
+    """K/V of token embeddings x (..., D) -> two (..., H, hd) arrays."""
+    D = x.shape[-1]
+    hd = D // num_heads
+    kv = dense_apply(lp["kv"], x).reshape(x.shape[:-1] + (2, num_heads, hd))
+    return kv[..., 0, :, :], kv[..., 1, :, :]
+
+
+def _single_query_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            valid: jax.Array) -> jax.Array:
+    """q: (B, H, hd); k/v: (B, S, H, hd); valid: (B, S) bool.  Shared by the
+    cached and full paths so both reduce in the same order (parity)."""
+    hd = q.shape[-1]
+    logits = jnp.einsum('bhd,bshd->bhs', q, k) / jnp.sqrt(hd).astype(q.dtype)
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    attn = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum('bhs,bshd->bhd', attn, v)
+
+
+def cache_init(p: Params, x0: jax.Array, capacity: int, *,
+               num_heads: int) -> Params:
+    """Preallocated per-layer K/V cache seeded with the BOS entry at slot 0.
+
+    x0: (B, D) BOS embedding; returns ``{"layer_i": {"k","v"}}`` with k/v
+    shaped (B, capacity, H, hd).
+    """
+    B, D = x0.shape
+    hd = D // num_heads
+    cache: Params = {}
+    for i in range(_num_layers(p)):
+        k0, v0 = _kv_heads(p[f"layer_{i}"], x0, num_heads)  # (B, H, hd)
+        k = jnp.zeros((B, capacity, num_heads, hd), x0.dtype)
+        v = jnp.zeros((B, capacity, num_heads, hd), x0.dtype)
+        cache[f"layer_{i}"] = {"k": k.at[:, 0].set(k0),
+                               "v": v.at[:, 0].set(v0)}
+    return cache
+
+
+def cache_fill(p: Params, cache: Params, xs: jax.Array, *,
+               num_heads: int) -> Params:
+    """Bulk-write token embeddings xs (B, S, D) into slots 1..S in one batched
+    pass (token i -> slot i+1) — used by pop-only backward rollouts, which
+    build the cache from the terminal sequence once and then only query."""
+    out: Params = {}
+    S = xs.shape[1]
+    for i in range(_num_layers(p)):
+        lc = cache[f"layer_{i}"]
+        kn, vn = _kv_heads(p[f"layer_{i}"], xs, num_heads)  # (B, S, H, hd)
+        out[f"layer_{i}"] = {"k": lc["k"].at[:, 1:S + 1].set(kn),
+                             "v": lc["v"].at[:, 1:S + 1].set(vn)}
+    return out
+
+
+def cache_append(p: Params, cache: Params, x_new: jax.Array,
+                 slot: jax.Array, *, num_heads: int) -> Params:
+    """Write one token's K/V per layer at ``slot`` — a traced *scalar* index
+    shared by the whole batch (a cheap ``dynamic_update_slice``, no per-env
+    scatter).  The uniform slot is correct because the rollout appends the
+    token added at scan step t-1 into slot t for every env: envs whose step
+    t-1 added nothing (stopped / terminal) get a garbage entry at a slot
+    their ``length`` mask never reaches, and envs at max length re-write
+    their newest token's slot with identical values."""
+    out: Params = {}
+    for i in range(_num_layers(p)):
+        lc = cache[f"layer_{i}"]
+        kn, vn = _kv_heads(p[f"layer_{i}"], x_new, num_heads)  # (B, H, hd)
+        start = (0, slot, 0, 0)
+        out[f"layer_{i}"] = {
+            "k": jax.lax.dynamic_update_slice(lc["k"], kn[:, None], start),
+            "v": jax.lax.dynamic_update_slice(lc["v"], vn[:, None], start),
+        }
+    return out
+
+
+def _decode_query(p: Params, num_heads: int, kv_of_layer, attend,
+                  batch: int, dim: int) -> jax.Array:
+    """Shared latent-query stack; ``attend(q_heads, k, v) -> (B, H, hd)``."""
+    hd = dim // num_heads
+    h = jnp.broadcast_to(p["q0"][None, :], (batch, dim))
+    for i in range(_num_layers(p)):
+        lp = p[f"layer_{i}"]
+        k, v = kv_of_layer(i)
+        qh = dense_apply(lp["q"], layernorm_apply(lp["ln1"], h))
+        o = attend(qh.reshape(batch, num_heads, hd), k, v)
+        h = h + dense_apply(lp["proj"], o.reshape(batch, dim))
+        g = layernorm_apply(lp["ln2"], h)
+        h = h + dense_apply(lp["ff2"], jax.nn.gelu(dense_apply(lp["ff1"], g)))
+    return layernorm_apply(p["ln_f"], h)
+
+
+def encoder_query_cached(p: Params, cache: Params, lengths: jax.Array, *,
+                         num_heads: int, attn_impl: str = "auto"
+                         ) -> jax.Array:
+    """Latent-query pass over the cache; slots 0..lengths[b] are attended
+    (BOS + the env's tokens).  Returns (B, D).
+
+    ``attn_impl``: "jnp" (masked softmax, the CPU path), "kernel" (the
+    Pallas decode-attention kernel), or "auto" (kernel only when on TPU
+    *and* the kernels lower through Mosaic — ``REPRO_PALLAS_COMPILE=1``;
+    an interpret-mode kernel on the rollout hot path would be far slower
+    than the jnp fallback).
+    """
+    k0 = cache["layer_0"]["k"]
+    B, C = k0.shape[0], k0.shape[1]
+    dim = k0.shape[2] * k0.shape[3]
+    if attn_impl == "auto":
+        from ..kernels.ops import pallas_compiled
+        attn_impl = "kernel" if (jax.default_backend() == "tpu"
+                                 and pallas_compiled()) else "jnp"
+    if attn_impl == "kernel":
+        from ..kernels.ops import decode_attention
+        kv_valid = lengths.astype(jnp.int32) + 1          # + BOS slot
+        attend = lambda q, k, v: decode_attention(q, k, v, kv_valid)
+    else:
+        valid = jnp.arange(C)[None, :] <= lengths[:, None]
+        attend = lambda q, k, v: _single_query_attention(q, k, v, valid)
+    return _decode_query(
+        p, num_heads,
+        lambda i: (cache[f"layer_{i}"]["k"], cache[f"layer_{i}"]["v"]),
+        attend, B, dim)
+
+
+def encoder_apply_cached(p: Params, x_new: jax.Array, cache: Params,
+                         lengths: jax.Array, *, num_heads: int,
+                         attn_impl: str = "auto", slot: Optional[jax.Array]
+                         = None):
+    """One incremental-decode step: append ``x_new``'s K/V per layer at
+    scalar slot ``slot`` (default ``max(lengths)``), then attend the single
+    latent query against the cache masked to ``lengths``.  Returns
+    ``(y (B, D), new_cache)``.
+    """
+    cache = cache_append(p, cache, x_new,
+                         jnp.max(lengths) if slot is None else slot,
+                         num_heads=num_heads)
+    y = encoder_query_cached(p, cache, lengths, num_heads=num_heads,
+                             attn_impl=attn_impl)
+    return y, cache
+
+
+def encoder_apply_bank(p: Params, xs: jax.Array, mask: jax.Array, *,
+                       num_heads: int) -> jax.Array:
+    """Full (uncached) latent-query pass over a bank of token embeddings.
+
+    xs: (B, S, D) embeddings (BOS included by the caller); mask: (B, S)
+    True = attendable.  Same math as the cached path — K/V from frozen
+    embeddings, query through the layer stack — computed in one batch.
+    """
+    B, S, D = xs.shape
+
+    def kv_of_layer(i):
+        return _kv_heads(p[f"layer_{i}"], xs, num_heads)
+
+    attend = lambda q, k, v: _single_query_attention(q, k, v, mask)
+    return _decode_query(p, num_heads, kv_of_layer, attend, B, D)

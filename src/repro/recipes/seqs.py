@@ -27,9 +27,16 @@ def _bitseq_env(n: int = 120, k: int = 8, beta: float = 3.0):
 
 
 def _bitseq_policy(env):
+    # decode arch: order-invariant latent-query transformer with KV-cache
+    # entry points — rollouts inside TrainLoop take the incremental-decode
+    # fast path (core/rollout.py) instead of re-encoding all L positions
+    # at every step.  Tradeoff: K/V come from frozen token embeddings
+    # (tokens are not contextualized against each other), a smaller
+    # function class than the pooled bidirectional encoder — pass
+    # arch="pooled" to reproduce the seed architecture exactly.
     return make_transformer_policy(env.vocab_size, env.L, env.action_dim,
                                    env.backward_action_dim, num_layers=3,
-                                   dim=64, num_heads=8)
+                                   dim=64, num_heads=8, arch="decode")
 
 
 def _bitseq_config(env, opts):
@@ -160,7 +167,7 @@ register(Recipe(
     make_env=lambda: TFBind8Environment(),
     make_policy=lambda env: make_transformer_policy(
         env.vocab_size, 8, env.action_dim, env.backward_action_dim,
-        num_layers=2, dim=64),
+        num_layers=2, dim=64, arch="decode"),
     make_config=_seq_tb_config,
     make_eval=_enumerable_eval(None, 4 ** 8),
     make_evals=_enumerable_evals(4 ** 8),
@@ -202,7 +209,7 @@ register(Recipe(
     make_policy=lambda env: make_transformer_policy(
         env.vocab_size, env.max_len, env.action_dim,
         env.backward_action_dim, num_layers=3, dim=64, num_heads=8,
-        init_log_z=150.0),
+        init_log_z=150.0, arch="decode"),
     make_config=lambda env, opts: GFNConfig(
         objective="tb", num_envs=opts.num_envs, lr=1e-3, log_z_lr=0.64,
         exploration_eps=1e-2, stop_action=env.stop_action),

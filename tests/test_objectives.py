@@ -143,6 +143,67 @@ class TestIdentities:
                                        expect, rtol=1e-5)
 
 
+class TestSubTBImpls:
+    """``subtb_loss`` backends (dense pairwise tensor, O(T) prefix-sum
+    recurrence, Pallas kernel) must agree to fp tolerance on arbitrary
+    rollouts, including variable-length ones with invalid tails."""
+
+    @pytest.mark.parametrize("lam", [0.5, 0.9, 0.99])
+    def test_backends_agree_hypergrid(self, lam):
+        env, params = make_hypergrid(2, 5)
+        pol = make_mlp_policy(env.obs_dim, env.action_dim,
+                              env.backward_action_dim, hidden=(16,))
+        pp = pol.init(KEY)
+        batch = forward_rollout(KEY, env, params, pol.apply, pp, 16)
+        ev = evaluate_trajectory(pol.apply, pp, batch, stop_action=env.dim)
+        dense = float(subtb_loss(ev, batch, lam, impl="dense"))
+        prefix = float(subtb_loss(ev, batch, lam, impl="prefix"))
+        pallas = float(subtb_loss(ev, batch, lam, impl="pallas"))
+        auto = float(subtb_loss(ev, batch, lam))
+        np.testing.assert_allclose(prefix, dense, rtol=1e-5)
+        np.testing.assert_allclose(pallas, dense, rtol=1e-4)
+        np.testing.assert_allclose(auto, dense, rtol=1e-4)
+
+    def test_backends_agree_variable_length(self):
+        """Variable-length trajectories (DAG stop action) exercise the
+        on-trajectory masking of all three backends."""
+        env = repro.DAGEnvironment(d=3)
+        params = env.init(KEY)
+        pol = make_mlp_policy(9, env.action_dim, env.backward_action_dim,
+                              hidden=(16,), learn_backward=True)
+        pp = pol.init(KEY)
+        batch = forward_rollout(KEY, env, params, pol.apply, pp, 16)
+        ev = evaluate_trajectory(pol.apply, pp, batch)
+        dense = float(subtb_loss(ev, batch, 0.9, impl="dense"))
+        prefix = float(subtb_loss(ev, batch, 0.9, impl="prefix"))
+        pallas = float(subtb_loss(ev, batch, 0.9, impl="pallas"))
+        np.testing.assert_allclose(prefix, dense, rtol=1e-5)
+        np.testing.assert_allclose(pallas, dense, rtol=1e-4)
+
+    def test_prefix_gradients_match_dense(self):
+        env, params = make_hypergrid(2, 4)
+        pol = make_mlp_policy(env.obs_dim, env.action_dim,
+                              env.backward_action_dim, hidden=(16,))
+        pp = pol.init(KEY)
+        batch = forward_rollout(KEY, env, params, pol.apply, pp, 8)
+
+        def loss(impl):
+            return lambda p: subtb_loss(
+                evaluate_trajectory(pol.apply, p, batch, env.dim), batch,
+                0.9, impl=impl)
+
+        g_dense = jax.grad(loss("dense"))(pp)
+        # "pallas" must be jax.grad-safe too: its forward is the kernel,
+        # its custom backward differentiates the prefix recurrence
+        for impl in ("prefix", "pallas"):
+            g_other = jax.grad(loss(impl))(pp)
+            for a, b in zip(jax.tree_util.tree_leaves(g_dense),
+                            jax.tree_util.tree_leaves(g_other)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-5, rtol=1e-4,
+                                           err_msg=impl)
+
+
 class TestMDB:
     def test_mdb_zero_for_exact_posterior_policy(self):
         """On a 2-node DAG env the flow equations are solvable by hand:

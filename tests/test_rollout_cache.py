@@ -1,0 +1,223 @@
+"""Incremental-decode rollout fast path: cached vs. uncached parity.
+
+The contract under test (ISSUE 3 acceptance): for every sequence env with
+``supports_incremental_obs``, a forward rollout with the KV cache threaded
+through the scan carry produces the *same* ``RolloutBatch`` as the full
+re-encode path — identical sampled trajectories under the same key, and
+policy log-probs equal to fp32 tolerance; and attaching the cache preserves
+the PR 2 invariant (EvalSuite-on vs. -off training is bitwise identical).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core.objectives import evaluate_trajectory
+from repro.core.policies import make_transformer_policy
+from repro.core.rollout import backward_rollout, forward_rollout
+from repro.envs.bitseq import BitSeqEnvironment
+from repro.envs.sequences import (AMPEnvironment, QM9Environment,
+                                  TFBind8Environment)
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _decode_policy(env, max_len, **kw):
+    kw.setdefault("num_layers", 2)
+    kw.setdefault("dim", 32)
+    kw.setdefault("num_heads", 4)
+    return make_transformer_policy(env.vocab_size, max_len, env.action_dim,
+                                   env.backward_action_dim, arch="decode",
+                                   **kw)
+
+
+def _env_cases():
+    bit = BitSeqEnvironment(n=16, k=4)
+    tfb = TFBind8Environment()
+    amp = AMPEnvironment(max_len=10)
+    return {
+        "bitseq": (bit, _decode_policy(bit, bit.L)),
+        "tfbind8": (tfb, _decode_policy(tfb, 8)),
+        "amp": (amp, _decode_policy(amp, amp.max_len, learn_backward=True)),
+    }
+
+
+def _rollout_pair(env, pol, B=8, **kw):
+    ep = env.init(KEY)
+    pp = pol.init(KEY)
+    uncached = forward_rollout(KEY, env, ep, pol, pp, B,
+                               use_cache=False, **kw)
+    cached = forward_rollout(KEY, env, ep, pol, pp, B,
+                             use_cache=True, **kw)
+    return ep, pp, uncached, cached
+
+
+class TestForwardParity:
+    @pytest.mark.parametrize("name", sorted(_env_cases()))
+    def test_batches_identical(self, name):
+        env, pol = _env_cases()[name]
+        _, _, uncached, cached = _rollout_pair(env, pol)
+        # sampled trajectories identical under the same key
+        np.testing.assert_array_equal(np.asarray(uncached.actions),
+                                      np.asarray(cached.actions))
+        for field in ("obs", "fwd_mask", "bwd_mask", "bwd_actions", "valid",
+                      "done", "log_reward", "log_r_state", "energy"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(uncached, field)),
+                np.asarray(getattr(cached, field)), err_msg=field)
+        # behavior log-probs (the logits at the sampled actions) to fp32 tol
+        np.testing.assert_allclose(np.asarray(uncached.log_pf_beh),
+                                   np.asarray(cached.log_pf_beh), atol=1e-4)
+
+    @pytest.mark.parametrize("name", sorted(_env_cases()))
+    def test_cached_logits_match_full_reencode(self, name):
+        """Teacher-forcing the *full* apply on the cached rollout's stored
+        observations reproduces the behavior-time log-probs: the cached
+        per-step logits equal the full re-encode of the same states."""
+        env, pol = _env_cases()[name]
+        ep, pp, _, cached = _rollout_pair(env, pol)
+        ev = evaluate_trajectory(pol.apply, pp, cached)
+        valid = np.asarray(cached.valid)
+        np.testing.assert_allclose(np.asarray(ev.log_pf)[valid],
+                                   np.asarray(cached.log_pf_beh)[valid],
+                                   atol=1e-4)
+
+    def test_exploration_eps_parity(self):
+        env, pol = _env_cases()["bitseq"]
+        _, _, uncached, cached = _rollout_pair(env, pol,
+                                               exploration_eps=0.3)
+        np.testing.assert_array_equal(np.asarray(uncached.actions),
+                                      np.asarray(cached.actions))
+
+    def test_use_cache_flags(self):
+        env, pol = _env_cases()["bitseq"]
+        ep = env.init(KEY)
+        pp = pol.init(KEY)
+        # QM9 (prepend/append) has no incremental obs: use_cache=True raises
+        qm = QM9Environment()
+        qpol = _decode_policy(qm, qm.length)
+        with pytest.raises(ValueError):
+            forward_rollout(KEY, qm, qm.init(KEY), qpol, qpol.init(KEY), 4,
+                            use_cache=True)
+        # a bare apply callable cannot engage the cache
+        with pytest.raises(ValueError):
+            forward_rollout(KEY, env, ep, pol.apply, pp, 4, use_cache=True)
+        # ...but works uncached ("auto" quietly stays on the full path)
+        batch = forward_rollout(KEY, env, ep, pol.apply, pp, 4)
+        assert batch.num_steps == env.max_steps
+
+
+class TestCacheAtMaxLength:
+    def test_amp_forced_to_max_length(self):
+        """A policy that never stops drives every env to max_len, where the
+        cache slot of the newest token is re-written idempotently and the
+        forced stop is the only legal action — parity must survive both."""
+        env, pol = _env_cases()["amp"]
+        ep = env.init(KEY)
+        pp = pol.init(KEY)
+        # bias the readout so 'stop' (last action) is never sampled early
+        pp = jax.tree_util.tree_map(lambda x: x, pp)
+        pp["readout"]["b"] = pp["readout"]["b"].at[env.stop_action].set(-50.0)
+        uncached = forward_rollout(KEY, env, ep, pol, pp, 6, use_cache=False)
+        cached = forward_rollout(KEY, env, ep, pol, pp, 6, use_cache=True)
+        lengths = np.asarray(jnp.sum(uncached.obs[-1] != env.pad, axis=-1))
+        assert (lengths == env.max_len).all()
+        np.testing.assert_array_equal(np.asarray(uncached.actions),
+                                      np.asarray(cached.actions))
+        np.testing.assert_allclose(np.asarray(uncached.log_pf_beh),
+                                   np.asarray(cached.log_pf_beh), atol=1e-4)
+
+    def test_bitseq_full_fill(self):
+        env, pol = _env_cases()["bitseq"]
+        _, _, uncached, cached = _rollout_pair(env, pol)
+        assert (np.asarray(cached.obs[-1]) != env.empty).all()
+        np.testing.assert_array_equal(np.asarray(uncached.obs[-1]),
+                                      np.asarray(cached.obs[-1]))
+
+
+class TestBackwardCached:
+    @pytest.mark.parametrize("name", ["tfbind8", "amp"])
+    def test_pop_only_backward_parity(self, name):
+        env, pol = _env_cases()[name]
+        ep = env.init(KEY)
+        pp = pol.init(KEY)
+        batch = forward_rollout(KEY, env, ep, pol, pp, 6)
+        term = batch.obs[-1]
+        if name == "amp":
+            ts = env.terminal_state_from_tokens(
+                term, jnp.sum(term != env.pad, axis=-1))
+        else:
+            ts = env.terminal_state_from_tokens(term)
+        kw = dict(collect=True)
+        r_un = backward_rollout(KEY, env, ep, pol, pp, ts,
+                                use_cache=False, **kw)
+        r_ca = backward_rollout(KEY, env, ep, pol, pp, ts,
+                                use_cache=True, **kw)
+        np.testing.assert_array_equal(np.asarray(r_un.batch.actions),
+                                      np.asarray(r_ca.batch.actions))
+        np.testing.assert_allclose(np.asarray(r_un.log_pf),
+                                   np.asarray(r_ca.log_pf), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(r_un.log_pb),
+                                   np.asarray(r_ca.log_pb), atol=1e-4)
+
+    def test_bitseq_backward_stays_uncached(self):
+        """Arbitrary-position removal cannot reuse the cache; the rollout
+        must fall back to full re-encode (and still work)."""
+        env, pol = _env_cases()["bitseq"]
+        ep = env.init(KEY)
+        pp = pol.init(KEY)
+        ts = env.terminal_state_from_words(
+            jnp.zeros((4, env.L), jnp.int32))
+        out = backward_rollout(KEY, env, ep, pol, pp, ts)
+        assert np.isfinite(np.asarray(out.log_pf)).all()
+
+
+class TestTrainLoopInvariants:
+    def test_eval_suite_bitwise_identical_with_cached_sampler(self):
+        """PR 2 invariant, now with the cache engaged: attaching an
+        EvalSuite must leave cached-rollout training bitwise identical."""
+        from repro.algo.loop import TrainLoop
+        from repro.core.trainer import GFNConfig
+        from repro.evals import EvalSuite, ExactDistributionEval
+
+        env = BitSeqEnvironment(n=8, k=2)
+        ep = env.init(KEY)
+        pol = _decode_policy(env, env.L, num_layers=1, dim=16, num_heads=2)
+        cfg = GFNConfig(objective="tb", num_envs=4, lr=1e-3)
+        suite = EvalSuite([ExactDistributionEval(env, ep, pol.apply)],
+                          every=5)
+        with_evals = TrainLoop(env, ep, pol, cfg, evals=suite)
+        without = TrainLoop(env, ep, pol, cfg)
+        key = jax.random.PRNGKey(3)
+        st_e, aux_e = with_evals.run(key, 12, mode="scan")
+        st_n, aux_n = without.run(key, 12, mode="scan")
+        for a, b in zip(jax.tree_util.tree_leaves(st_e.train),
+                        jax.tree_util.tree_leaves(st_n.train)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(aux_e[0]["loss"]),
+                                      np.asarray(aux_n[0]["loss"]))
+
+    def test_cached_and_uncached_training_agree(self):
+        """One jitted train step over the cached sampler vs. an uncached
+        clone of the same policy: identical sampled batches feed identical
+        losses (the losses teacher-force the full apply either way)."""
+        from repro.algo.loop import LoopState, make_sampler_train_step
+        from repro.algo.samplers import OnPolicySampler
+        from repro.core.policies import Policy
+        from repro.core.trainer import (GFNConfig, init_train_state)
+
+        env = BitSeqEnvironment(n=8, k=2)
+        ep = env.init(KEY)
+        pol = _decode_policy(env, env.L, num_layers=1, dim=16, num_heads=2)
+        plain = Policy(pol.init, pol.apply)     # no cache entry points
+        cfg = GFNConfig(objective="tb", num_envs=4, lr=1e-3)
+        losses = []
+        for p in (pol, plain):
+            step_fn, tx, init_s = make_sampler_train_step(
+                env, ep, p, cfg, OnPolicySampler())
+            ts = init_train_state(KEY, p, tx)
+            state = LoopState(train=ts, sampler=init_s())
+            _, (metrics, _) = jax.jit(step_fn)(state)
+            losses.append(float(metrics["loss"]))
+        np.testing.assert_allclose(losses[0], losses[1], rtol=1e-5)
