@@ -1,5 +1,6 @@
 """Rollout fast-path benchmark: KV-cached incremental decode vs. full
-re-encode, per sequence environment.
+re-encode, per sequence environment — plus the mesh weak-scaling suite
+(``run_mesh``): sharded rollout throughput on an 8-virtual-device CPU mesh.
 
 Three rows per env:
 
@@ -20,6 +21,11 @@ are shared-overhead-bound and jitter around 1x on CPU), and the >= 3x
 acceptance bar on the k=4 row.
 """
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
 
 import jax
 
@@ -107,3 +113,133 @@ def run(quick: bool = True):
                                  f";speedup_vs_uncached="
                                  f"{cached / decode_un:.2f}")
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Mesh weak-scaling suite
+# ---------------------------------------------------------------------------
+#: shard count of the weak-scaling check (an 8-virtual-device CPU mesh)
+MESH_SHARDS = 8
+#: global rollout batch for the fixed-work comparison (recipe scale)
+MESH_GLOBAL_ENVS = 256
+
+
+def _mesh_rows(quick: bool, shards: int):
+    """Two comparisons on a ``(shards,)`` mesh, hypergrid 4x8^4 MLP rollout:
+
+    - *fixed global batch* (``MESH_GLOBAL_ENVS`` envs on 1 device vs split
+      over the mesh): sharding the identical workload must stay within 20%
+      of the single-device step rate — this is the no-gather/-serialization
+      check that holds even when virtual CPU devices oversubscribe the
+      physical cores, and the row CI asserts on;
+    - *fixed per-device batch* (canonical weak scaling, B envs per device,
+      1 vs ``shards`` devices): meaningful on real multi-chip hardware;
+      recorded for the trajectory, oversubscription-bound on small CPUs.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.policies import make_mlp_policy
+    from repro.launch.mesh import make_mesh
+
+    n = 10 if quick else 50
+    env = repro.HypergridEnvironment(dim=4, side=8)
+    env_params = env.init(KEY)
+    pol = make_mlp_policy(env.obs_dim, env.action_dim,
+                          env.backward_action_dim, hidden=(64, 64))
+    pp = pol.init(KEY)
+    mesh = make_mesh((shards,), ("batch",))
+
+    def rate_single(num_envs):
+        @jax.jit
+        def step(key):
+            key, sub = jax.random.split(key)
+            b = forward_rollout(sub, env, env_params, pol.apply, pp,
+                                num_envs)
+            return key, b.log_reward
+
+        r, _ = time_iterations(step, KEY, n)
+        return r
+
+    def rate_sharded(envs_per_device):
+        def local(key):
+            off = jax.lax.axis_index("batch") * envs_per_device
+            b = forward_rollout(key, env, env_params, pol.apply, pp,
+                                envs_per_device, env_offset=off)
+            return b.log_reward
+
+        sharded = shard_map(local, mesh=mesh, in_specs=(P(),),
+                            out_specs=P("batch"), check_rep=False)
+
+        @jax.jit
+        def step(key):
+            key, sub = jax.random.split(key)
+            return key, sharded(sub)
+
+        r, _ = time_iterations(step, KEY, n)
+        return r
+
+    Bg = MESH_GLOBAL_ENVS
+    Bd = Bg // shards
+    r1_global = rate_single(Bg)
+    r8_global = rate_sharded(Bd)
+    r1_device = rate_single(Bd)
+    # the sharded program is identical under both framings (B envs/device);
+    # only the single-device baseline changes
+    r8_device = r8_global
+    meshed = dict(plan="data_parallel", device_count=shards,
+                  mesh_shape=(shards,))
+    return [
+        row(f"rollout/hypergrid_weak_single_b{Bg}", r1_global,
+            envs=Bg),
+        row(f"rollout/hypergrid_weak_dp{shards}_b{Bg}", r8_global,
+            envs=Bg, envs_per_device=Bd,
+            sharding_efficiency=f"{r8_global / r1_global:.2f}", **meshed),
+        row(f"rollout/hypergrid_weak_single_b{Bd}", r1_device,
+            envs=Bd),
+        row(f"rollout/hypergrid_weak_dp{shards}_per_device", r8_device,
+            envs=Bg, envs_per_device=Bd,
+            weak_scaling=f"{r8_device / r1_device:.2f}", **meshed),
+    ]
+
+
+def run_mesh(quick: bool = True, shards: int = MESH_SHARDS):
+    """Entry point for the ``mesh`` benchmark suite: runs in-process when
+    enough devices are visible, otherwise re-execs itself in a subprocess
+    with ``--xla_force_host_platform_device_count`` (the backend's device
+    count is fixed at first use, so a 1-device parent can't grow one)."""
+    if jax.device_count() >= shards:
+        return _mesh_rows(quick, shards)
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if "xla_force_host_platform_device_count" not in f]
+    env["XLA_FLAGS"] = " ".join(
+        flags + [f"--xla_force_host_platform_device_count={shards}"])
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    cmd = [sys.executable, "-m", "benchmarks.rollout", "--mesh-json",
+           "--shards", str(shards)] + ([] if quick else ["--full"])
+    out = subprocess.run(cmd, cwd=root, env=env, capture_output=True,
+                         text=True, timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"mesh benchmark subprocess failed:\n{out.stdout[-2000:]}"
+            f"\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _mesh_json_main(argv):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh-json", action="store_true")
+    ap.add_argument("--shards", type=int, default=MESH_SHARDS)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    rows = _mesh_rows(quick=not args.full, shards=args.shards)
+    print(json.dumps(rows))
+
+
+if __name__ == "__main__":
+    _mesh_json_main(sys.argv[1:])

@@ -21,8 +21,10 @@ from .rewards.hypergrid import (EasyHypergridRewardModule,
 from .core.rollout import backward_rollout, forward_rollout
 from .core.trainer import (GFNConfig, train, train_compiled,
                            train_vectorized)
-from .algo import (BackwardReplaySampler, EpsilonNoisySampler,
-                   OnPolicySampler, ReplaySampler, Sampler, TrainLoop)
+from .algo import (BackwardReplaySampler, DataParallelPlan,
+                   EpsilonNoisySampler, ExecutionPlan, OnPolicySampler,
+                   ReplaySampler, Sampler, SeedsByDataPlan, TrainLoop,
+                   VmapSeedsPlan, make_plan)
 from .evals import (EvalSuite, ExactDistributionEval, LogZBoundsEval,
                     RewardCorrelationEval, SampledDistributionEval)
 
@@ -37,6 +39,8 @@ __all__ = [
     "GFNConfig", "train", "train_compiled", "train_vectorized",
     "Sampler", "OnPolicySampler", "EpsilonNoisySampler", "ReplaySampler",
     "BackwardReplaySampler", "TrainLoop",
+    "ExecutionPlan", "VmapSeedsPlan", "DataParallelPlan", "SeedsByDataPlan",
+    "make_plan",
     "EvalSuite", "ExactDistributionEval", "SampledDistributionEval",
     "RewardCorrelationEval", "LogZBoundsEval",
 ]

@@ -1,16 +1,22 @@
-"""Composable GFlowNet training algorithms: pluggable samplers + TrainLoop.
+"""Composable GFlowNet training algorithms: samplers + plans + TrainLoop.
 
-``TrainLoop`` runs one uniform step (sample -> objective -> update) in three
-execution modes; ``Sampler`` implementations decide where trajectories come
-from (on-policy, epsilon-noisy, replay, backward replay) and all compose
-with the fully-compiled ``lax.scan`` path.
+``TrainLoop`` runs one uniform step (sample -> objective -> update);
+``Sampler`` implementations decide where trajectories come from (on-policy,
+epsilon-noisy, replay, backward replay); ``ExecutionPlan`` implementations
+decide where the step executes (one device, vmapped seeds, a shard_map'ped
+device mesh, or both).  Everything composes with the fully-compiled
+``lax.scan`` path.
 """
 from .loop import LoopState, TrainLoop, make_sampler_train_step
+from .plan import (PLANS, DataParallelPlan, ExecutionPlan, SeedsByDataPlan,
+                   ShardInfo, VmapSeedsPlan, auto_plan, make_plan)
 from .samplers import (SAMPLERS, BackwardReplaySampler, EpsilonNoisySampler,
                        OnPolicySampler, ReplaySampler, Sampler, make_sampler)
 
 __all__ = [
     "Sampler", "OnPolicySampler", "EpsilonNoisySampler", "ReplaySampler",
     "BackwardReplaySampler", "SAMPLERS", "make_sampler",
+    "ExecutionPlan", "VmapSeedsPlan", "DataParallelPlan", "SeedsByDataPlan",
+    "ShardInfo", "PLANS", "make_plan", "auto_plan",
     "TrainLoop", "LoopState", "make_sampler_train_step",
 ]

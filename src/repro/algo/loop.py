@@ -1,111 +1,196 @@
-"""Unified GFlowNet training loop over pluggable samplers.
+"""Unified GFlowNet training loop over pluggable samplers and device plans.
 
-One step is always ``sample -> objective -> grad -> optimizer update``; the
-three seed entry points (``train`` / ``train_compiled`` /
-``train_vectorized``) are now execution *modes* of the same step:
+One step is always ``sample -> objective -> grad -> optimizer update``.  Two
+orthogonal axes configure how it executes:
 
+- ``mode`` (how the loop is *driven*):
     mode="python"      python loop over a jitted step (one compile, reused);
-                       supports host callbacks for eval/logging.
+                       supports host callbacks and checkpointing.
     mode="scan"        the whole run fused into one ``lax.scan`` program —
                        the purejaxrl-style mode behind the paper's largest
                        speedups.
-    mode="vmap_seeds"  whole training runs vmapped over seeds (the paper's
-                       "trainer vectorization" future-work item).
+- ``plan`` (where the step *runs*, :mod:`repro.algo.plan`): ``single``,
+  ``vmap_seeds``, ``data_parallel`` (rollouts/objectives shard_map'ped over
+  a device mesh), or ``seeds_x_data``.  Both modes drive any plan.
+
+``mode="vmap_seeds"`` is kept as a back-compat alias for the seed plan.
 
 Sampler state (e.g. a replay buffer) lives in :class:`LoopState` and rides
-the scan carry, so off-policy training stays fully compiled.
+the scan carry — per shard under a data-parallel plan — so off-policy
+training stays fully compiled on any mesh.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core.trainer import (GFNConfig, init_train_state, make_loss_fn,
+from ..core.trainer import (GFNConfig, init_train_state, make_loss_parts_fn,
                             make_optimizer)
 from ..core.types import TrainState, pytree_dataclass, replace
 from ..optim import adamw as optim
+from .plan import ExecutionPlan, make_plan
 from .samplers import Sampler, make_sampler
+
+
+def _check_restored_shapes(restored: "LoopState", fresh: "LoopState"):
+    """Checkpoints restore by leaf name with no shape validation, so a
+    resume under a different plan / batch size / sampler config would
+    silently load stale-shaped arrays (and e.g. corrupt a replay buffer
+    whose capacity changed).  Fail loudly instead; only the metrics slot is
+    legitimately resizable (see :func:`_migrate_metrics`)."""
+    for name, r, f in (("train", restored.train, fresh.train),
+                       ("sampler", restored.sampler, fresh.sampler)):
+        rl = jax.tree_util.tree_leaves(r)
+        fl = jax.tree_util.tree_leaves(f)
+        bad = [(tuple(a.shape), tuple(b.shape)) for a, b in zip(rl, fl)
+               if a.shape != b.shape]
+        if bad:
+            raise ValueError(
+                f"checkpointed {name} state does not match this loop's "
+                f"shapes (first mismatch: restored {bad[0][0]} vs expected "
+                f"{bad[0][1]}); resume with the same plan, num_envs, and "
+                "sampler configuration the checkpoint was saved under")
+
+
+def _migrate_metrics(restored, fresh):
+    """Fit a restored MetricsState into a freshly-sized row buffer: resuming
+    with a different iteration budget resizes the buffer, so recorded rows
+    are copied over (truncating if the new budget is smaller)."""
+    if isinstance(restored, tuple) or isinstance(fresh, tuple) or \
+            restored.steps.shape == fresh.steps.shape:
+        return restored
+    n = min(restored.steps.shape[0], fresh.steps.shape[0])
+    return replace(
+        fresh,
+        steps=fresh.steps.at[:n].set(restored.steps[:n]),
+        values={k: fresh.values[k].at[:n].set(restored.values[k][:n])
+                for k in fresh.values},
+        count=jnp.minimum(restored.count, n))
 
 
 @pytree_dataclass
 class LoopState:
     """Training-loop carry: optimizer/train state, sampler state, and the
     in-scan metric log (``()`` when no :class:`repro.evals.EvalSuite` is
-    attached)."""
+    attached).  Under a data-parallel plan the sampler leaves carry a
+    leading per-shard axis; under a seed plan every leaf carries a leading
+    seed axis."""
     train: TrainState
     sampler: Any
     metrics: Any = ()
 
 
 def make_sampler_train_step(env, env_params, policy, cfg: GFNConfig,
-                            sampler: Sampler):
-    """One fully-jittable iteration over an arbitrary sampler.
+                            sampler: Sampler, plan=None):
+    """One fully-jittable iteration over an arbitrary sampler and plan.
 
     Returns ``(step_fn, tx, init_sampler_fn)`` where
     ``step_fn(LoopState) -> (LoopState, (metrics, batch))``.
+    ``init_sampler_fn`` builds the *local* (single-shard, single-seed)
+    sampler state — :meth:`ExecutionPlan.prepare_state` adds the device
+    axes.
+
+    The loss is computed from the objective's additive ``(sum, weight)``
+    parts (:data:`repro.core.objectives.OBJECTIVE_PARTS`): each shard
+    differentiates its local sum, the plan ``psum``s sums, weights, and
+    gradients across the mesh, and the division happens once on the global
+    quantities — so a data-parallel step reproduces the single-device loss
+    and update exactly (up to float reassociation), even for objectives
+    whose normalizer is a data-dependent count (DB/FLDB/MDB).
     """
+    plan = make_plan(plan, num_envs=cfg.num_envs)
+    shard = plan.shard_info()
     tx = make_optimizer(cfg)
-    loss_fn = make_loss_fn(env, policy.apply, cfg)
+    parts_fn = make_loss_parts_fn(env, policy.apply, cfg)
     # samplers get the full Policy (not just .apply): the rollouts they
     # build engage the KV-cache fast path when the policy + env support it
-    init_sampler, sample_fn = sampler.build(env, env_params, policy, cfg)
+    sig = inspect.signature(sampler.build).parameters
+    shard_aware = "shard" in sig or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in sig.values())
+    if shard_aware:
+        init_sampler, sample_fn = sampler.build(env, env_params, policy, cfg,
+                                                shard=shard)
+    else:
+        # third-party sampler predating the shard-aware contract
+        if shard.num_shards > 1:
+            raise TypeError(
+                f"sampler {type(sampler).__name__} does not accept the "
+                "'shard' argument and cannot run under a sharded plan; add "
+                "shard=None to its build() signature (see "
+                "repro.algo.samplers)")
+        init_sampler, sample_fn = sampler.build(env, env_params, policy, cfg)
 
-    def step_fn(state: LoopState
-                ) -> Tuple[LoopState, Tuple[Dict[str, jax.Array], Any]]:
-        ts = state.train
+    def core(ts: TrainState, sampler_state
+             ) -> Tuple[Tuple[TrainState, Any],
+                        Tuple[Dict[str, jax.Array], Any]]:
         key, k_sample = jax.random.split(ts.key)
-        sampler_state, batch = sample_fn(state.sampler, k_sample, ts.params,
+        sampler_state, batch = sample_fn(sampler_state, k_sample, ts.params,
                                          ts.step)
-        loss, grads = jax.value_and_grad(loss_fn)(ts.params, batch)
+        (num, den), grads = jax.value_and_grad(
+            parts_fn, has_aux=True)(ts.params, batch)
+        mean_log_r = jnp.mean(batch.log_reward)
+        # cross-shard reduction: sums/weights/gradients are additive, so a
+        # psum then one division recovers the exact global quantities
+        num = shard.psum(num)
+        den = jnp.maximum(shard.psum(den), 1.0)
+        grads = jax.tree_util.tree_map(lambda g: shard.psum(g) / den, grads)
+        loss = num / den
+        mean_log_r = shard.pmean(mean_log_r)
         updates, opt_state = tx.update(grads, ts.opt_state, ts.params)
         params = optim.apply_updates(ts.params, updates)
         metrics = {"loss": loss,
                    "log_z": params.get("log_z", jnp.zeros(())),
-                   "mean_log_reward": jnp.mean(batch.log_reward)}
+                   "mean_log_reward": mean_log_r}
         train = TrainState(params=params, opt_state=opt_state,
                            step=ts.step + 1, key=key)
-        return (LoopState(train=train, sampler=sampler_state,
-                          metrics=state.metrics), (metrics, batch))
+        return (train, sampler_state), (metrics, batch)
 
-    return step_fn, tx, init_sampler
+    return plan.wrap_step(core), tx, init_sampler
 
 
 class TrainLoop:
-    """Composable trainer: environment x policy x objective x sampler.
+    """Composable trainer: environment x policy x objective x sampler x plan.
 
     >>> loop = TrainLoop(env, env_params, policy, cfg,
-    ...                  sampler=ReplaySampler(capacity=4096))
+    ...                  sampler=ReplaySampler(capacity=4096),
+    ...                  plan="data_parallel")
     >>> state, (metrics, log_r) = loop.run(key, 10_000, mode="scan")
 
     ``sampler`` accepts a :class:`Sampler` instance or a registry name
     (``"on_policy"``, ``"eps_noisy"``, ``"replay"``, ``"backward_replay"``);
     default is on-policy, reproducing the seed trainer exactly.
 
+    ``plan`` accepts an :class:`repro.algo.plan.ExecutionPlan` instance or
+    a name (``"single"`` | ``"vmap_seeds"`` | ``"data_parallel"`` |
+    ``"seeds_x_data"`` | ``"auto"``); seed plans need ``num_seeds`` at
+    construction (``make_plan("vmap_seeds", num_seeds=8)``).
+
     ``evals`` accepts a :class:`repro.evals.EvalSuite`; its evaluators run
     *inside* the compiled step through a ``lax.cond`` gate every
     ``evals.every`` iterations, writing rows into the ``metrics`` slot of the
     carry — evaluation is read-only (its PRNG stream is independent of the
-    training key), so attaching a suite leaves training trajectories
-    bitwise identical.
+    training key), runs *outside* any ``shard_map`` on the replicated
+    params (so rows match single-device runs), and attaching a suite leaves
+    training trajectories bitwise identical.
     """
 
     def __init__(self, env, env_params, policy, cfg: GFNConfig,
-                 sampler=None, evals=None):
+                 sampler=None, evals=None, plan=None):
         self.env = env
         self.env_params = env_params
         self.policy = policy
         self.cfg = cfg
         self.sampler = make_sampler(sampler or "on_policy")
         self.evals = evals
+        self.plan = make_plan(plan, num_envs=cfg.num_envs)
         self.step_fn, self.tx, self._init_sampler = make_sampler_train_step(
-            env, env_params, policy, cfg, self.sampler)
+            env, env_params, policy, cfg, self.sampler, plan=self.plan)
 
-    def init(self, key: jax.Array,
-             num_iterations: Optional[int] = None) -> LoopState:
-        """Fresh carry; pass ``num_iterations`` to size the metric buffers
-        when an eval suite is attached."""
+    def _init_local(self, key: jax.Array,
+                    num_iterations: Optional[int]) -> LoopState:
         train = init_train_state(key, self.policy, self.tx)
         metrics = ()
         if self.evals is not None:
@@ -116,47 +201,104 @@ class TrainLoop:
         return LoopState(train=train, sampler=self._init_sampler(),
                          metrics=metrics)
 
+    def init(self, key: jax.Array,
+             num_iterations: Optional[int] = None) -> LoopState:
+        """Fresh carry with the plan's device/seed axes applied; pass
+        ``num_iterations`` to size the metric buffers when an eval suite is
+        attached."""
+        if self.plan.seeds:
+            state = jax.vmap(lambda k: self._init_local(k, num_iterations))(
+                jax.random.split(key, self.plan.seeds))
+        else:
+            state = self._init_local(key, num_iterations)
+        return self.plan.prepare_state(state)
+
     def _step_with_eval(self, state: LoopState):
         """One training step followed by the cond-gated eval hook.  The hook
         sees post-update params at iteration ``step - 1``, matching the
         python-mode callback cadence (it fires at ``it % every == 0``)."""
         state, out = self.step_fn(state)
         if self.evals is not None:
-            ms = self.evals.maybe_record(state.metrics, state.train.params,
-                                         state.train.step - 1)
+            step = state.train.step
+            it = (step if jnp.ndim(step) == 0 else step.reshape(-1)[0]) - 1
+            record = self.evals.maybe_record
+            if self.plan.seeds:
+                record = jax.vmap(record, in_axes=(0, 0, None))
+            ms = record(state.metrics, state.train.params, it)
             state = replace(state, metrics=ms)
         return state, out
 
     def run(self, key: jax.Array, num_iterations: int, *,
             mode: str = "python", num_seeds: Optional[int] = None,
-            callback: Optional[Callable] = None, callback_every: int = 100):
+            callback: Optional[Callable] = None, callback_every: int = 100,
+            checkpoint=None, checkpoint_every: int = 0,
+            restore: bool = False):
         """Run training; return value depends on ``mode``:
 
         - ``python``:     ``(LoopState, history)`` — history collects
           ``callback(it, train_state, metrics, batch)`` results.
         - ``scan``:       ``(LoopState, (metrics, log_rewards))`` with
-          time-stacked metrics.
-        - ``vmap_seeds``: ``(LoopState, metrics)`` with leading
-          ``num_seeds`` axis on every leaf (requires ``num_seeds``).
+          time-stacked metrics (and per-seed axes after time under seed
+          plans).
+        - ``vmap_seeds``: back-compat alias (single plan only) for a
+          ``vmap_seeds`` plan; returns ``(LoopState, metrics)`` with
+          leading ``num_seeds`` axis on every leaf.
+
+        ``checkpoint`` accepts a
+        :class:`repro.checkpoint.manager.CheckpointManager` (python mode
+        only): the full :class:`LoopState` is saved every
+        ``checkpoint_every`` iterations (asynchronously) and once at the
+        end; ``restore=True`` resumes from the manager's latest complete
+        step instead of starting fresh.
         """
+        if checkpoint is not None and mode != "python":
+            raise ValueError(
+                "checkpointing needs the python driver (mode='python'); "
+                "compiled modes cannot call host code mid-run")
+        if (restore or checkpoint_every > 0) and checkpoint is None:
+            raise ValueError(
+                "restore/checkpoint_every need a checkpoint manager; pass "
+                "checkpoint=CheckpointManager(dir) (silently retraining "
+                "from scratch would be worse than this error)")
+        if mode == "vmap_seeds":
+            return self._run_legacy_vmap_seeds(key, num_iterations,
+                                               num_seeds, callback)
+        if callback is not None and mode != "python":
+            raise ValueError(
+                f"callback is only supported in mode='python' (got "
+                f"mode={mode!r}); compiled modes cannot call host code")
+
         if mode == "python":
             # donate the LoopState carry: params/opt/buffer update in place
             # instead of being copied every iteration (scan mode fuses the
             # whole run, so only the python driver needs this)
             step = jax.jit(self._step_with_eval, donate_argnums=0)
             state = self.init(key, num_iterations)
+            start = 0
+            if checkpoint is not None and restore:
+                fresh = state
+                at, state = checkpoint.restore_latest(state)
+                if at is not None:
+                    start = int(at)
+                    _check_restored_shapes(state, fresh)
+                    state = replace(state, metrics=_migrate_metrics(
+                        state.metrics, fresh.metrics))
             history = []
-            for it in range(num_iterations):
+            for it in range(start, num_iterations):
                 state, (metrics, batch) = step(state)
                 if callback is not None and (it % callback_every == 0
                                              or it == num_iterations - 1):
                     history.append(callback(it, state.train, metrics, batch))
+                if checkpoint is not None and checkpoint_every > 0 \
+                        and (it + 1) % checkpoint_every == 0 \
+                        and it + 1 < num_iterations:
+                    # save() copies device->host before returning, so the
+                    # donated carry is safe to reuse immediately
+                    checkpoint.save(it + 1, state, blocking=False)
+            if checkpoint is not None and num_iterations > start:
+                checkpoint.save(num_iterations, state)
+                checkpoint.wait()
             return state, history
-
-        if callback is not None and mode != "python":
-            raise ValueError(
-                f"callback is only supported in mode='python' (got "
-                f"mode={mode!r}); compiled modes cannot call host code")
 
         if mode == "scan":
             state = self.init(key, num_iterations)
@@ -171,21 +313,34 @@ class TrainLoop:
 
             return scan_run(state)
 
-        if mode == "vmap_seeds":
-            if num_seeds is None:
-                raise ValueError("mode='vmap_seeds' requires num_seeds")
-
-            def single(k):
-                s = self.init(k, num_iterations)
-
-                def body(s, _):
-                    s, (metrics, _) = self._step_with_eval(s)
-                    return s, metrics
-
-                return jax.lax.scan(body, s, None, length=num_iterations)
-
-            return jax.jit(jax.vmap(single))(
-                jax.random.split(key, num_seeds))
-
         raise ValueError(f"unknown mode {mode!r}; "
                          "expected 'python' | 'scan' | 'vmap_seeds'")
+
+    def _run_legacy_vmap_seeds(self, key, num_iterations, num_seeds,
+                               callback):
+        """The seed API's ``mode="vmap_seeds"``: whole runs vmapped over
+        seeds.  Only meaningful on the single-device plan — meshed users
+        select a ``seeds_x_data`` plan instead."""
+        if callback is not None:
+            raise ValueError(
+                "callback is only supported in mode='python' (got "
+                "mode='vmap_seeds'); compiled modes cannot call host code")
+        if type(self.plan) is not ExecutionPlan:
+            raise ValueError(
+                f"mode='vmap_seeds' composes only with the single-device "
+                f"plan (got plan={self.plan.name!r}); use "
+                f"plan=make_plan('seeds_x_data', num_seeds=...) or "
+                f"make_plan('vmap_seeds', num_seeds=...) instead")
+        if num_seeds is None:
+            raise ValueError("mode='vmap_seeds' requires num_seeds")
+
+        def single(k):
+            s = self._init_local(k, num_iterations)
+
+            def body(s, _):
+                s, (metrics, _) = self._step_with_eval(s)
+                return s, metrics
+
+            return jax.lax.scan(body, s, None, length=num_iterations)
+
+        return jax.jit(jax.vmap(single))(jax.random.split(key, num_seeds))

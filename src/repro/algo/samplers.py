@@ -9,12 +9,18 @@ compose with every objective and with the fully-compiled ``lax.scan`` loop.
 
 Contract
 --------
-``sampler.build(env, env_params, policy_apply, cfg)`` returns a pair
-``(init_fn, sample_fn)`` of *pure* functions.  ``policy_apply`` is either a
-bare ``apply(params, obs)`` callable or a full
+``sampler.build(env, env_params, policy_apply, cfg, shard=None)`` returns a
+pair ``(init_fn, sample_fn)`` of *pure* functions.  ``policy_apply`` is
+either a bare ``apply(params, obs)`` callable or a full
 :class:`repro.core.policies.Policy` — samplers just forward it to the
 rollouts, which engage the incremental-decode KV-cache fast path when given
-a cache-capable Policy on a supporting env:
+a cache-capable Policy on a supporting env.  ``shard`` is the
+:class:`repro.algo.plan.ShardInfo` of the execution plan: under a
+``data_parallel`` plan ``sample_fn`` runs *inside* a ``shard_map`` and must
+produce only its shard's slice of the global batch — samplers divide their
+batch (and any buffer capacity) by ``shard.num_shards`` and key rollouts on
+``shard.env_offset`` so the concatenation over shards equals the
+single-device batch draw:
 
     init_fn() -> SamplerState
         Constructs the sampler's carried state (an arbitrary fixed-shape
@@ -42,6 +48,7 @@ from ..buffer.fifo import FIFOBuffer
 from ..core.rollout import (backward_rollout, concat_rollout_batches,
                             forward_rollout)
 from ..core.trainer import GFNConfig, current_eps
+from .plan import ShardInfo
 
 SamplerState = Any
 SampleFn = Callable[[SamplerState, jax.Array, Any, jax.Array],
@@ -56,8 +63,8 @@ class Sampler(abc.ABC):
     name: str = "base"
 
     @abc.abstractmethod
-    def build(self, env, env_params, policy_apply,
-              cfg: GFNConfig) -> Tuple[InitFn, SampleFn]:
+    def build(self, env, env_params, policy_apply, cfg: GFNConfig,
+              shard: Optional[ShardInfo] = None) -> Tuple[InitFn, SampleFn]:
         ...
 
 
@@ -72,8 +79,10 @@ class OnPolicySampler(Sampler):
     def __init__(self, num_envs: Optional[int] = None):
         self.num_envs = num_envs
 
-    def build(self, env, env_params, policy_apply, cfg: GFNConfig):
-        B = self.num_envs or cfg.num_envs
+    def build(self, env, env_params, policy_apply, cfg: GFNConfig,
+              shard: Optional[ShardInfo] = None):
+        shard = shard or ShardInfo()
+        B = shard.split_batch(self.num_envs or cfg.num_envs)
 
         def init_fn():
             return ()
@@ -81,7 +90,8 @@ class OnPolicySampler(Sampler):
         def sample_fn(state, key, policy_params, step):
             eps = current_eps(cfg, step)
             batch = forward_rollout(key, env, env_params, policy_apply,
-                                    policy_params, B, exploration_eps=eps)
+                                    policy_params, B, exploration_eps=eps,
+                                    env_offset=shard.env_offset(B))
             return state, batch
 
         return init_fn, sample_fn
@@ -104,8 +114,10 @@ class EpsilonNoisySampler(Sampler):
         self.anneal_steps = anneal_steps
         self.num_envs = num_envs
 
-    def build(self, env, env_params, policy_apply, cfg: GFNConfig):
-        B = self.num_envs or cfg.num_envs
+    def build(self, env, env_params, policy_apply, cfg: GFNConfig,
+              shard: Optional[ShardInfo] = None):
+        shard = shard or ShardInfo()
+        B = shard.split_batch(self.num_envs or cfg.num_envs)
 
         def init_fn():
             return ()
@@ -118,7 +130,8 @@ class EpsilonNoisySampler(Sampler):
             else:
                 eps = jnp.asarray(self.eps, jnp.float32)
             batch = forward_rollout(key, env, env_params, policy_apply,
-                                    policy_params, B, exploration_eps=eps)
+                                    policy_params, B, exploration_eps=eps,
+                                    env_offset=shard.env_offset(B))
             return state, batch
 
         return init_fn, sample_fn
@@ -137,6 +150,14 @@ class ReplaySampler(Sampler):
 
     Entirely ``jnp``: the buffer state rides the ``lax.scan`` carry, so the
     fully-compiled training mode keeps zero host round-trips.
+
+    Under a ``data_parallel`` plan the buffer is *per shard*: every device
+    keeps an independent FIFO of ``capacity / num_shards`` slots holding
+    only its own rollouts' terminals and replays ``replay_batch /
+    num_shards`` of them locally — the replay path never moves a
+    trajectory across devices.  Selection keys are decorrelated with the
+    shard index (otherwise every shard would pick the same slot pattern);
+    prioritization normalizes within the shard.
     """
     name = "replay"
     #: which backward policy reconstructs trajectories from terminals
@@ -152,10 +173,14 @@ class ReplaySampler(Sampler):
         self.temperature = temperature
         self.num_envs = num_envs
 
-    def build(self, env, env_params, policy_apply, cfg: GFNConfig):
-        B = self.num_envs or cfg.num_envs
-        R = self.replay_batch or B
-        buf = FIFOBuffer(self.capacity)
+    def build(self, env, env_params, policy_apply, cfg: GFNConfig,
+              shard: Optional[ShardInfo] = None):
+        shard = shard or ShardInfo()
+        B = shard.split_batch(self.num_envs or cfg.num_envs)
+        R = shard.split_batch(self.replay_batch or self.num_envs
+                              or cfg.num_envs)
+        buf = FIFOBuffer.per_shard(self.capacity, shard.num_shards,
+                                   min_batch=B)
 
         def init_fn():
             _, state0 = env.reset(1, env_params)
@@ -165,10 +190,16 @@ class ReplaySampler(Sampler):
 
         def sample_fn(buf_state, key, policy_params, step):
             k_roll, k_sel, k_replay = jax.random.split(key, 3)
+            # rollout keys stay replicated (per-env folding decorrelates and
+            # keeps single-device parity); selection keys must differ per
+            # shard or every buffer would replay the same slot pattern
+            k_sel = shard.fold_shard(k_sel)
+            k_replay = shard.fold_shard(k_replay)
             eps = current_eps(cfg, step)
             fresh, final_state = forward_rollout(
                 k_roll, env, env_params, policy_apply, policy_params, B,
-                exploration_eps=eps, return_final_state=True)
+                exploration_eps=eps, return_final_state=True,
+                env_offset=shard.env_offset(B))
             buf_state = buf.add_batch(
                 buf_state, {"state": final_state,
                             "log_reward": fresh.log_reward})

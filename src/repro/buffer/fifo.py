@@ -16,10 +16,36 @@ class BufferState(NamedTuple):
 
 
 class FIFOBuffer:
-    """Fixed-capacity circular buffer over an arbitrary item pytree."""
+    """Fixed-capacity circular buffer over an arbitrary item pytree.
+
+    The buffer is single-shard by construction: state leaves carry a
+    leading ``capacity`` axis and every op is pure jnp, so a data-parallel
+    plan runs one independent buffer per device by splitting the global
+    capacity with :meth:`per_shard` and letting each shard thread its own
+    :class:`BufferState` through the ``shard_map``'ped step
+    (:mod:`repro.algo.plan`).
+    """
 
     def __init__(self, capacity: int):
         self.capacity = capacity
+
+    @classmethod
+    def per_shard(cls, global_capacity: int, num_shards: int = 1,
+                  min_batch: int = 0) -> "FIFOBuffer":
+        """A shard's slice of a ``global_capacity`` buffer split over
+        ``num_shards`` devices; ``min_batch`` (the shard's per-step insert
+        size) guards against a split too small to absorb one batch."""
+        if num_shards > 1 and global_capacity % num_shards:
+            raise ValueError(
+                f"replay capacity {global_capacity} is not divisible by "
+                f"{num_shards} shards; pick a multiple of the device count")
+        cap = global_capacity // max(num_shards, 1)
+        if cap < min_batch:
+            raise ValueError(
+                f"per-shard replay capacity {cap} (= {global_capacity} / "
+                f"{num_shards}) cannot absorb a per-shard batch of "
+                f"{min_batch}; grow the buffer or shrink the batch")
+        return cls(cap)
 
     def init(self, item_prototype: Any) -> BufferState:
         data = jax.tree_util.tree_map(

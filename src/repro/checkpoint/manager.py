@@ -88,10 +88,10 @@ class CheckpointManager:
             tmp.rename(final)          # atomic publish
             self._gc()
 
+        self.wait()     # never let two write()/_gc() bodies race
         if blocking:
             write()
         else:
-            self.wait()
             self._thread = threading.Thread(target=write, daemon=True)
             self._thread.start()
         return self.dir / f"step_{step}"
@@ -147,6 +147,13 @@ class CheckpointManager:
             shard_named, _ = _flatten(shardings)
         leaves = []
         for i, (name, proto) in enumerate(named):
+            if name not in data:
+                raise ValueError(
+                    f"checkpoint step_{step} in {self.dir} has no entry for "
+                    f"{name!r}: it was saved from a different configuration "
+                    "(e.g. a different execution plan, sampler, or without "
+                    "an eval suite); restore with the configuration it was "
+                    "saved under")
             arr = data[name]
             if shard_named is not None:
                 arr = jax.device_put(arr, shard_named[i][1])

@@ -12,7 +12,7 @@ on-policy training, replay-buffer training, and backward-sampled trajectories.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -76,12 +76,24 @@ def evaluate_trajectory(policy_apply: PolicyApply, params,
 # Objectives
 # ---------------------------------------------------------------------------
 
-def tb_loss(ev: TrajEval, batch: RolloutBatch, log_z: jax.Array) -> jax.Array:
-    """Trajectory Balance, Eq. (4)."""
+def combine_parts(num: jax.Array, den: jax.Array) -> jax.Array:
+    """Loss from an unreduced ``(sum, weight)`` pair (see OBJECTIVE_PARTS)."""
+    return num / jnp.maximum(den, 1.0)
+
+
+def tb_parts(ev: TrajEval, batch: RolloutBatch,
+             log_z: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Trajectory Balance, Eq. (4), as an unreduced (sum, count) pair."""
     s_pf = jnp.sum(ev.log_pf, axis=0)
     s_pb = jnp.sum(ev.log_pb, axis=0)
     delta = log_z + s_pf - batch.log_reward - s_pb
-    return jnp.mean(jnp.square(delta))
+    return jnp.sum(jnp.square(delta)), jnp.asarray(
+        batch.log_reward.shape[0], jnp.float32)
+
+
+def tb_loss(ev: TrajEval, batch: RolloutBatch, log_z: jax.Array) -> jax.Array:
+    """Trajectory Balance, Eq. (4)."""
+    return combine_parts(*tb_parts(ev, batch, log_z))
 
 
 def _flow_targets(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
@@ -90,13 +102,20 @@ def _flow_targets(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
     return jnp.where(batch.done, log_r, ev.log_flow)
 
 
-def db_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
-    """Detailed Balance, Eq. (3); F(terminal) := R."""
+def db_parts(ev: TrajEval,
+             batch: RolloutBatch) -> Tuple[jax.Array, jax.Array]:
+    """Detailed Balance, Eq. (3), as (residual sum, valid-transition count);
+    F(terminal) := R."""
     flows = _flow_targets(ev, batch)
     delta = flows[:-1] + ev.log_pf - flows[1:] - ev.log_pb
     delta = jnp.where(batch.valid, delta, 0.0)
-    n = jnp.maximum(jnp.sum(batch.valid), 1)
-    return jnp.sum(jnp.square(delta)) / n
+    n = jnp.sum(batch.valid).astype(jnp.float32)
+    return jnp.sum(jnp.square(delta)), n
+
+
+def db_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
+    """Detailed Balance, Eq. (3); F(terminal) := R."""
+    return combine_parts(*db_parts(ev, batch))
 
 
 #: beyond this many states the dense (T+1, T+1, B) residual tensor is
@@ -225,8 +244,16 @@ def subtb_loss(ev: TrajEval, batch: RolloutBatch, lam: float = 0.9,
     return jnp.mean(per_traj)
 
 
-def fldb_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
-    """Forward-Looking DB, Eq. (7).
+def subtb_parts(ev: TrajEval, batch: RolloutBatch, lam: float = 0.9,
+                impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+    """:func:`subtb_loss` as (per-trajectory sum, trajectory count)."""
+    B = ev.log_pf.shape[1]
+    return subtb_loss(ev, batch, lam, impl) * B, jnp.asarray(B, jnp.float32)
+
+
+def fldb_parts(ev: TrajEval,
+               batch: RolloutBatch) -> Tuple[jax.Array, jax.Array]:
+    """Forward-Looking DB, Eq. (7), as (residual sum, transition count).
 
     The environment supplies energies with E(s0)=0 and E(x)=-log R(x) at
     terminals, so the terminal forward-looking flow target is
@@ -236,12 +263,19 @@ def fldb_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
     dE = batch.energy[1:] - batch.energy[:-1]
     delta = fl_flows[:-1] + ev.log_pf - fl_flows[1:] - ev.log_pb + dE
     delta = jnp.where(batch.valid, delta, 0.0)
-    n = jnp.maximum(jnp.sum(batch.valid), 1)
-    return jnp.sum(jnp.square(delta)) / n
+    n = jnp.sum(batch.valid).astype(jnp.float32)
+    return jnp.sum(jnp.square(delta)), n
 
 
-def mdb_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
-    """Modified DB (Deleu et al. 2022) for envs where every state is terminal.
+def fldb_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
+    """Forward-Looking DB, Eq. (7)."""
+    return combine_parts(*fldb_parts(ev, batch))
+
+
+def mdb_parts(ev: TrajEval,
+              batch: RolloutBatch) -> Tuple[jax.Array, jax.Array]:
+    """Modified DB (Deleu et al. 2022) for envs where every state is
+    terminal, as (residual sum, non-stop transition count).
 
     For a non-stop transition s -> s':
       R(s) P_F(s'|s) P_F(stop|s') = R(s') P_B(s|s') P_F(stop|s)
@@ -253,8 +287,13 @@ def mdb_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
     # moves s -> terminal-copy(s); identified by done[t+1].
     real = jnp.logical_and(batch.valid, jnp.logical_not(batch.done[1:]))
     delta = jnp.where(real, delta, 0.0)
-    n = jnp.maximum(jnp.sum(real), 1)
-    return jnp.sum(jnp.square(delta)) / n
+    n = jnp.sum(real).astype(jnp.float32)
+    return jnp.sum(jnp.square(delta)), n
+
+
+def mdb_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
+    """Modified DB (Deleu et al. 2022)."""
+    return combine_parts(*mdb_parts(ev, batch))
 
 
 # ---------------------------------------------------------------------------
@@ -264,27 +303,44 @@ def mdb_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
 # specific extras (log_z, subtb_lambda) are pulled from params/cfg inside the
 # adapter, so trainers dispatch by name with zero per-objective branching and
 # new objectives are one registry entry.
+#
+# OBJECTIVE_PARTS holds the *unreduced* form: (sum, weight) with
+# loss == sum / max(weight, 1).  Both components are additive over batch
+# slices, which is what lets a data-parallel plan compute them per shard,
+# ``lax.psum`` each, and recover the exact global loss — a mean of
+# per-shard means would silently differ whenever the denominator is a
+# data-dependent count (DB/FLDB/MDB normalize by valid-transition counts).
 
-def _tb(ev: TrajEval, batch: RolloutBatch, params, cfg) -> jax.Array:
-    return tb_loss(ev, batch, params["log_z"])
-
-
-def _db(ev: TrajEval, batch: RolloutBatch, params, cfg) -> jax.Array:
-    return db_loss(ev, batch)
-
-
-def _subtb(ev: TrajEval, batch: RolloutBatch, params, cfg) -> jax.Array:
-    return subtb_loss(ev, batch, cfg.subtb_lambda)
-
-
-def _fldb(ev: TrajEval, batch: RolloutBatch, params, cfg) -> jax.Array:
-    return fldb_loss(ev, batch)
+def _tb_parts(ev, batch, params, cfg):
+    return tb_parts(ev, batch, params["log_z"])
 
 
-def _mdb(ev: TrajEval, batch: RolloutBatch, params, cfg) -> jax.Array:
-    return mdb_loss(ev, batch)
+def _db_parts(ev, batch, params, cfg):
+    return db_parts(ev, batch)
 
 
-OBJECTIVES = {
-    "tb": _tb, "db": _db, "subtb": _subtb, "fldb": _fldb, "mdb": _mdb,
+def _subtb_parts(ev, batch, params, cfg):
+    return subtb_parts(ev, batch, cfg.subtb_lambda)
+
+
+def _fldb_parts(ev, batch, params, cfg):
+    return fldb_parts(ev, batch)
+
+
+def _mdb_parts(ev, batch, params, cfg):
+    return mdb_parts(ev, batch)
+
+
+OBJECTIVE_PARTS = {
+    "tb": _tb_parts, "db": _db_parts, "subtb": _subtb_parts,
+    "fldb": _fldb_parts, "mdb": _mdb_parts,
 }
+
+
+def _reduced(parts_fn):
+    def obj(ev: TrajEval, batch: RolloutBatch, params, cfg) -> jax.Array:
+        return combine_parts(*parts_fn(ev, batch, params, cfg))
+    return obj
+
+
+OBJECTIVES = {name: _reduced(fn) for name, fn in OBJECTIVE_PARTS.items()}

@@ -51,7 +51,8 @@ import jax
 import jax.numpy as jnp
 
 from ..envs.base import Environment
-from .types import masked_logprobs, pytree_dataclass, sample_masked
+from .types import (masked_logprobs, pytree_dataclass,
+                    sample_masked_per_env)
 
 PolicyApply = Callable[[Any, jax.Array], Dict[str, jax.Array]]
 
@@ -145,16 +146,26 @@ def forward_rollout(key: jax.Array, env: Environment, env_params,
                     num_envs: int, *, exploration_eps: jax.Array | float = 0.0,
                     num_steps: Optional[int] = None,
                     return_final_state: bool = False,
-                    use_cache: Union[bool, str] = "auto"):
+                    use_cache: Union[bool, str] = "auto",
+                    env_offset: Union[int, jax.Array] = 0):
     """Sample ``num_envs`` trajectories; ``policy_apply`` may be a bare
     ``apply(params, obs)`` callable or a full
     :class:`repro.core.policies.Policy` — passing the latter enables the
     incremental-decode fast path (see module docstring) when both the
     policy and the environment support it.  ``use_cache``: "auto" (engage
-    when supported), True (require), or False (force full re-encode)."""
+    when supported), True (require), or False (force full re-encode).
+
+    ``env_offset`` is the *global* index of this rollout's first
+    environment: every random draw is keyed per-env on
+    ``fold_in(key_t, env_offset + i)``, so a data-parallel shard rolling
+    out envs ``[off, off + b)`` of a global batch samples exactly the
+    trajectories the single-device run samples for those envs
+    (:mod:`repro.algo.plan`).  Single-device callers leave it at 0.
+    """
     policy, apply_fn = _policy_entry(policy_apply)
     cached = _cache_engaged(env, policy, use_cache)
     T = num_steps if num_steps is not None else env.max_steps
+    env_ids = env_offset + jnp.arange(num_envs)
     obs0, state0 = env.reset(num_envs, env_params)
 
     def step_fn(carry, xs):
@@ -174,8 +185,10 @@ def forward_rollout(key: jax.Array, env: Environment, env_params,
         # terminal no-op environments keep a legal dummy action (argmax mask)
         safe_mask = jnp.where(was_done[:, None],
                               jnp.ones_like(fmask), fmask)
-        actions, log_pf = sample_masked(key_t, out["logits"], safe_mask,
-                                        eps=exploration_eps)
+        actions, log_pf = sample_masked_per_env(key_t, out["logits"],
+                                                safe_mask,
+                                                eps=exploration_eps,
+                                                env_ids=env_ids)
         _, nstate, log_r, done, _ = env.step(state, actions, env_params)
         bwd_actions = env.get_backward_action(state, actions, nstate,
                                               env_params)
@@ -232,7 +245,8 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
                      known_log_reward: Optional[jax.Array] = None,
                      with_log_pf: bool = True,
                      num_steps: Optional[int] = None,
-                     use_cache: Union[bool, str] = "auto"
+                     use_cache: Union[bool, str] = "auto",
+                     env_offset: Union[int, jax.Array] = 0
                      ) -> BackwardRollout:
     """Sample tau ~ P_B(.|x) from given terminal states; return log P_F(tau)
     and log P_B(tau|x) — the Monte-Carlo estimator of the paper's
@@ -299,7 +313,8 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
             if logits_b is None:
                 logits_b = jnp.zeros_like(bmask, jnp.float32)
         safe_bmask = jnp.where(at_init[:, None], jnp.ones_like(bmask), bmask)
-        bwd_a, log_pb = sample_masked(key_t, logits_b, safe_bmask)
+        bwd_a, log_pb = sample_masked_per_env(key_t, logits_b, safe_bmask,
+                                              env_ids=env_ids)
         _, prev_state, _, _, _ = env.backward_step(state, bwd_a, env_params)
         fwd_a = env.get_forward_action(state, bwd_a, prev_state, env_params)
         prev_obs = env.observe(prev_state, env_params)
@@ -324,6 +339,7 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
         return (prev_state, acc_pf, acc_pb), ys
 
     B = terminal_state.steps.shape[0]
+    env_ids = env_offset + jnp.arange(B)
     zeros = jnp.zeros((B,), jnp.float32)
     keys = jax.random.split(key, T)
     (state0, log_pf, log_pb), ys = jax.lax.scan(

@@ -3,13 +3,15 @@ entry points.
 
 ``make_train_step`` builds one fully-jitted on-policy iteration:
 rollout -> objective -> grad -> optimizer update.  The three seed drivers
-(``train`` / ``train_compiled`` / ``train_vectorized``) are preserved as thin
-aliases over :class:`repro.algo.TrainLoop` execution modes (``python`` /
-``scan`` / ``vmap_seeds``); new code should use ``TrainLoop`` directly, which
-additionally accepts pluggable samplers (replay, backward replay, ...).
+(``train`` / ``train_compiled`` / ``train_vectorized``) survive only as
+*deprecation shims* over :class:`repro.algo.TrainLoop` execution modes
+(``python`` / ``scan`` / ``vmap_seeds``); new code should use ``TrainLoop``
+directly, which additionally accepts pluggable samplers (replay, backward
+replay, ...) and device-mesh execution plans (:mod:`repro.algo.plan`).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -17,7 +19,7 @@ import jax.numpy as jnp
 
 from ..envs.base import Environment
 from ..optim import adamw as optim
-from .objectives import OBJECTIVES, evaluate_trajectory
+from .objectives import OBJECTIVE_PARTS, OBJECTIVES, evaluate_trajectory
 from .rollout import RolloutBatch
 from .types import TrainState
 
@@ -65,6 +67,27 @@ def make_loss_fn(env: Environment, policy_apply, cfg: GFNConfig):
     return loss_fn
 
 
+def make_loss_parts_fn(env: Environment, policy_apply, cfg: GFNConfig):
+    """The objective as additive ``(sum, weight)`` parts:
+    ``loss == sum / max(weight, 1)``.
+
+    Differentiating the sum (with the weight as aux) is what lets a
+    data-parallel plan ``psum`` sums, weights, *and* gradients across
+    shards before one global division — exactly the single-device loss and
+    gradient, even when the normalizer is a data-dependent count
+    (see :data:`repro.core.objectives.OBJECTIVE_PARTS`).
+    """
+    parts = OBJECTIVE_PARTS[cfg.objective]
+
+    def parts_fn(params, batch: RolloutBatch):
+        ev = evaluate_trajectory(policy_apply, params, batch,
+                                 stop_action=cfg.stop_action)
+        num, den = parts(ev, batch, params, cfg)
+        return num, den
+
+    return parts_fn
+
+
 def current_eps(cfg: GFNConfig, step: jax.Array) -> jax.Array:
     if cfg.exploration_anneal_steps > 0:
         frac = jnp.clip(step.astype(jnp.float32)
@@ -105,47 +128,49 @@ def init_train_state(key: jax.Array, policy, tx) -> TrainState:
                       step=jnp.zeros((), jnp.int32), key=kt)
 
 
+# ---------------------------------------------------------------------------
+# Deprecated seed entry points — one shim, three names
+# ---------------------------------------------------------------------------
+
+def _loop_shim(name: str, mode: str, key, env, env_params, policy, cfg,
+               num_iterations: int, sampler=None, **run_kwargs):
+    warnings.warn(
+        f"repro.core.trainer.{name} is deprecated; use "
+        f"repro.algo.TrainLoop(...).run(mode={mode!r}) (which also accepts "
+        "pluggable samplers, eval suites, and device-mesh plans)",
+        DeprecationWarning, stacklevel=3)
+    from ..algo.loop import TrainLoop
+    loop = TrainLoop(env, env_params, policy, cfg, sampler=sampler)
+    state, aux = loop.run(key, num_iterations, mode=mode, **run_kwargs)
+    return state.train, aux
+
+
 def train(key: jax.Array, env: Environment, env_params, policy,
           cfg: GFNConfig, num_iterations: int,
           callback: Optional[Callable] = None, callback_every: int = 100,
           sampler=None):
-    """Python-loop driver with a jitted step (one compile, reused).
-
-    Back-compat alias for ``TrainLoop(...).run(mode="python")`` (paper
-    Listing 1/2 usage); returns ``(TrainState, history)`` as in the seed.
-    """
-    from ..algo.loop import TrainLoop
-    loop = TrainLoop(env, env_params, policy, cfg, sampler=sampler)
-    state, history = loop.run(key, num_iterations, mode="python",
-                              callback=callback,
-                              callback_every=callback_every)
-    return state.train, history
+    """Deprecated alias for ``TrainLoop(...).run(mode="python")`` (paper
+    Listing 1/2 usage); returns ``(TrainState, history)`` as in the seed."""
+    return _loop_shim("train", "python", key, env, env_params, policy, cfg,
+                      num_iterations, sampler=sampler, callback=callback,
+                      callback_every=callback_every)
 
 
 def train_compiled(key: jax.Array, env: Environment, env_params, policy,
                    cfg: GFNConfig, num_iterations: int, sampler=None):
-    """Entire training run as one compiled ``lax.scan`` program.
-
-    Back-compat alias for ``TrainLoop(...).run(mode="scan")``; returns
-    ``(TrainState, (metrics, log_rewards))`` as in the seed.
-    """
-    from ..algo.loop import TrainLoop
-    loop = TrainLoop(env, env_params, policy, cfg, sampler=sampler)
-    state, aux = loop.run(key, num_iterations, mode="scan")
-    return state.train, aux
+    """Deprecated alias for ``TrainLoop(...).run(mode="scan")``; returns
+    ``(TrainState, (metrics, log_rewards))`` as in the seed."""
+    return _loop_shim("train_compiled", "scan", key, env, env_params, policy,
+                      cfg, num_iterations, sampler=sampler)
 
 
 def train_vectorized(key: jax.Array, env: Environment, env_params, policy,
                      cfg: GFNConfig, num_iterations: int, num_seeds: int,
                      sampler=None):
-    """vmap whole training runs over seeds — batched-seed trainer (the
-    paper's 'Trainer vectorization' future-work bullet).
-
-    Back-compat alias for ``TrainLoop(...).run(mode="vmap_seeds")``; returns
-    ``(TrainState, metrics)`` with a leading seed axis, as in the seed.
-    """
-    from ..algo.loop import TrainLoop
-    loop = TrainLoop(env, env_params, policy, cfg, sampler=sampler)
-    state, metrics = loop.run(key, num_iterations, mode="vmap_seeds",
-                              num_seeds=num_seeds)
-    return state.train, metrics
+    """Deprecated alias for ``TrainLoop(...).run(mode="vmap_seeds")`` (the
+    paper's 'Trainer vectorization' future-work bullet — now the
+    ``vmap_seeds`` / ``seeds_x_data`` execution plans); returns
+    ``(TrainState, metrics)`` with a leading seed axis, as in the seed."""
+    return _loop_shim("train_vectorized", "vmap_seeds", key, env, env_params,
+                      policy, cfg, num_iterations, sampler=sampler,
+                      num_seeds=num_seeds)

@@ -85,6 +85,27 @@ def masked_logprobs(logits: jax.Array, mask: jax.Array) -> jax.Array:
     return jax.nn.log_softmax(masked, axis=-1)
 
 
+def sample_masked_per_env(key: jax.Array, logits: jax.Array, mask: jax.Array,
+                          eps: float = 0.0,
+                          env_ids: jax.Array = None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Batched masked sampling where row i's draw depends only on
+    ``(key, env_ids[i])``.
+
+    The draw for each environment is made with ``fold_in(key, env_ids[i])``
+    rather than one batch-shaped draw from ``key``, so the random stream is
+    invariant to how the batch is sliced: a data-parallel shard holding
+    global envs ``[off, off + b)`` passes ``env_ids = off + arange(b)`` and
+    reproduces exactly the actions a single-device run samples for those
+    envs (the parity contract of :mod:`repro.algo.plan`).
+    """
+    if env_ids is None:
+        env_ids = jnp.arange(logits.shape[0])
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, env_ids)
+    return jax.vmap(lambda k, l, m: sample_masked(k, l, m, eps=eps))(
+        keys, logits, mask)
+
+
 def sample_masked(key: jax.Array, logits: jax.Array, mask: jax.Array,
                   eps: float = 0.0) -> Tuple[jax.Array, jax.Array]:
     """Sample actions from masked policy with epsilon-uniform exploration.

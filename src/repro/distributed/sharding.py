@@ -1,11 +1,18 @@
 """Sharding rules: parameter / activation / cache PartitionSpecs.
 
-Parameters are sharded 2-D — FSDP over ``data`` on one dim and TP over
-``model`` on the other (ZeRO-3-equivalent storage; XLA inserts the per-layer
-all-gathers inside the scan, which the latency-hiding scheduler overlaps with
-compute).  Divisibility is checked per-dim; non-divisible dims fall back to
-replication, so every architecture (e.g. hymba's 25 heads, qwen2-moe's
-padded experts) shards cleanly.
+Two consumers share this module:
+
+- the LM serving/training stack (``launch/``): parameters sharded 2-D —
+  FSDP over ``data`` on one dim and TP over ``model`` on the other
+  (ZeRO-3-equivalent storage; XLA inserts the per-layer all-gathers inside
+  the scan, which the latency-hiding scheduler overlaps with compute).
+  Divisibility is checked per-dim; non-divisible dims fall back to
+  replication, so every architecture (e.g. hymba's 25 heads, qwen2-moe's
+  padded experts) shards cleanly.
+- the GFN trainer's :mod:`repro.algo.plan` backend:
+  :func:`rollout_batch_specs` gives the PartitionSpec tree of a
+  time-major :class:`repro.core.rollout.RolloutBatch` sharded over the
+  environment axis — the out-specs of a ``data_parallel`` training step.
 """
 from __future__ import annotations
 
@@ -88,6 +95,22 @@ def param_specs(mesh, params: Any, fsdp: bool = True) -> Any:
 
 def batch_spec(mesh) -> Tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def rollout_batch_specs(axis: str, lead: int = 0):
+    """PartitionSpec tree sharding a :class:`RolloutBatch` over ``axis``.
+
+    Rollout batches are time-major: every field carries the environment
+    axis at position 1 except the (B,)-shaped ``log_reward``.  ``lead``
+    prepends that many unsharded axes (1 for per-seed stacked batches under
+    a ``seeds_x_data`` plan).
+    """
+    from ..core.rollout import RolloutBatch
+    t = lambda n: P(*([None] * (lead + n)), axis)  # noqa: E731
+    return RolloutBatch(
+        obs=t(1), fwd_mask=t(1), bwd_mask=t(1), actions=t(1),
+        bwd_actions=t(1), valid=t(1), done=t(1), log_reward=t(0),
+        log_r_state=t(1), energy=t(1), log_pf_beh=t(1))
 
 
 def _batch_ok(mesh, b: int) -> Optional[Tuple]:

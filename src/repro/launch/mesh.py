@@ -1,17 +1,23 @@
-"""Production mesh construction (assignment: MULTI-POD DRY-RUN step 1).
+"""Mesh construction for both training stacks.
 
 Defined as functions (never module-level constants) so importing this module
-never touches jax device state.  The single-pod mesh is 16 x 16 = 256 chips
-(TPU v5e pod); multi-pod adds a leading ``pod`` axis (2 pods = 512 chips).
+never touches jax device state.  Two consumers:
 
-Axis roles (DESIGN.md §6):
-  pod   — data parallelism across the DCN (gradient all-reduce only)
-  data  — FSDP within a pod (param/optimizer sharding + per-layer all-gather)
-  model — tensor parallelism within a pod (heads / ffn / vocab / experts)
+- the LM production stack: the single-pod mesh is 16 x 16 = 256 chips
+  (TPU v5e pod); multi-pod adds a leading ``pod`` axis (2 pods = 512 chips).
+  Axis roles (DESIGN.md §6): ``pod`` — data parallelism across the DCN,
+  ``data`` — FSDP within a pod, ``model`` — tensor parallelism within a pod.
+- the GFN trainer's :class:`repro.algo.plan.DataParallelPlan`, which builds
+  a 1-D ``("batch",)`` mesh here — over a *subset* of the visible devices
+  when ``--devices N`` asks for fewer than are attached (virtual CPU
+  devices included).
 """
 from __future__ import annotations
 
+import math
+
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,10 +27,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_mesh(shape, axes):
-    """Generic mesh for tests/benchmarks (e.g. (1, 1) on one CPU device)."""
-    return jax.make_mesh(tuple(shape), tuple(axes))
-
-
-def batch_axes(mesh) -> tuple:
-    """Mesh axes the global batch is sharded over."""
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    """Generic mesh for plans/tests/benchmarks (e.g. ``((4,), ("batch",))``
+    on an 8-virtual-device CPU).  Uses ``jax.make_mesh`` when the shape
+    consumes every visible device (it reorders devices for locality) and
+    falls back to the first ``prod(shape)`` devices otherwise."""
+    shape = tuple(shape)
+    n = math.prod(shape)
+    if n == jax.device_count():
+        return jax.make_mesh(shape, tuple(axes))
+    if n > jax.device_count():
+        raise ValueError(
+            f"mesh shape {shape} needs {n} devices but only "
+            f"{jax.device_count()} are visible; on CPU, set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, tuple(axes))

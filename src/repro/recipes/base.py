@@ -37,12 +37,23 @@ class RunOptions:
     """Run-scoped knobs resolved from CLI/caller + recipe defaults; passed to
     ``make_config`` so schedules (e.g. exploration annealing) can depend on
     the actual iteration budget.  ``eval_batch`` is the sample count handed
-    to sampling evaluators built by ``make_evals``."""
+    to sampling evaluators built by ``make_evals``.
+
+    ``plan`` / ``devices`` / ``num_seeds`` select the execution plan
+    (:mod:`repro.algo.plan`): ``plan`` is a registry name (``single`` |
+    ``auto`` | ``data_parallel`` | ``vmap_seeds`` | ``seeds_x_data``),
+    ``devices`` caps the mesh size (default: all visible devices), and
+    ``num_seeds`` sizes the seed axis of the seed plans.  ``num_envs`` is
+    always the *global* batch — a data-parallel plan shards it.
+    """
     seed: int = 0
     iterations: int = 20000
     num_envs: int = 16
     eval_every: int = 1000
     eval_batch: int = 2000
+    plan: str = "single"
+    devices: Optional[int] = None
+    num_seeds: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,6 +13,14 @@ Examples::
         --replay-capacity 4096 --prioritized
     python -m repro.run --recipe hypergrid_tb --set dim=2 --set side=8 \
         --cfg lr=3e-4
+
+    # data-parallel over a device mesh (on CPU: virtual devices)
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.run --recipe hypergrid_tb --plan data_parallel --devices 8
+
+    # checkpoint every 1000 iterations, resume after an interruption
+    python -m repro.run --recipe hypergrid_tb --checkpoint-every 1000
+    python -m repro.run --recipe hypergrid_tb --checkpoint-every 1000 --restore
 """
 from __future__ import annotations
 
@@ -25,9 +33,11 @@ import time
 from typing import Optional
 
 import jax
+import numpy as np
 
 from . import recipes
-from .algo import TrainLoop, make_sampler
+from .algo import TrainLoop, make_plan, make_sampler
+from .checkpoint.manager import CheckpointManager
 from .evals import EvalSuite
 from .recipes.base import RunOptions
 
@@ -65,8 +75,12 @@ def run_recipe(name: str, *, seed: int = 0,
                eval_every: Optional[int] = None,
                eval_batch: Optional[int] = None,
                sampler=None, sampler_kwargs: Optional[dict] = None,
+               plan: str = "single", devices: Optional[int] = None,
+               num_seeds: Optional[int] = None,
                env: Optional[dict] = None, config: Optional[dict] = None,
                metrics_json: Optional[str] = None,
+               checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 0, restore: bool = False,
                log=print) -> dict:
     """Run a registered recipe; returns ``{recipe, state, history,
     metrics}``.
@@ -77,6 +91,12 @@ def run_recipe(name: str, *, seed: int = 0,
     recipe declares compiled evaluators (``make_evals``), they run in-scan
     every ``eval_every`` iterations on ``eval_batch``-sized probes and land
     in ``out["metrics"]`` (and in the ``metrics_json`` file when given).
+
+    ``plan``/``devices``/``num_seeds`` pick the execution plan (see
+    :class:`repro.recipes.base.RunOptions`).  ``checkpoint_every > 0``
+    saves the full loop state into ``checkpoint_dir`` (default
+    ``checkpoints/<recipe>``) on that cadence plus once at the end;
+    ``restore=True`` resumes from the newest complete checkpoint there.
     """
     recipe = recipes.get(name)
     opts = RunOptions(
@@ -87,13 +107,21 @@ def run_recipe(name: str, *, seed: int = 0,
         eval_every=eval_every if eval_every is not None
         else recipe.eval_every,
         eval_batch=eval_batch if eval_batch is not None
-        else RunOptions.eval_batch)
+        else RunOptions.eval_batch,
+        plan=plan, devices=devices, num_seeds=num_seeds)
+    exec_plan = make_plan(plan, devices=devices, num_seeds=num_seeds,
+                          num_envs=opts.num_envs)
 
     if recipe.run_override is not None:
         if sampler is not None:
             raise ValueError(
                 f"recipe {recipe.name!r} uses a custom training driver; "
                 "--sampler is not supported for it")
+        if exec_plan.name != "single" or checkpoint_every or restore:
+            raise ValueError(
+                f"recipe {recipe.name!r} uses a custom training driver; "
+                "--plan/--checkpoint-every/--restore are not supported "
+                "for it")
         if metrics_json is not None:
             log(f"warning: recipe {recipe.name!r} uses a custom training "
                 "driver without an eval suite; --metrics-json is ignored")
@@ -113,26 +141,46 @@ def run_recipe(name: str, *, seed: int = 0,
         cfg = cfg._replace(**config)
     smp = make_sampler(sampler if sampler is not None else recipe.sampler,
                        **(sampler_kwargs or {}))
+    if exec_plan.name != "single":
+        log(f"plan: {exec_plan.name} over {exec_plan.device_count} "
+            f"device(s), mesh_shape={exec_plan.mesh_shape}, "
+            f"num_seeds={exec_plan.seeds}")
 
     suite = None
-    if recipe.make_evals is not None:
+    # seed plans carry a per-seed metric axis the JSON row extractor does
+    # not flatten; keep compiled evals to the unseeded plans
+    if recipe.make_evals is not None and not exec_plan.seeds:
         suite = EvalSuite(
             recipe.make_evals(environment, env_params, policy, opts),
             every=opts.eval_every, seed=opts.seed)
+    elif exec_plan.seeds and metrics_json is not None:
+        log(f"warning: plan {exec_plan.name!r} carries a per-seed metric "
+            "axis the eval suite does not flatten; --metrics-json is "
+            "ignored")
     loop = TrainLoop(environment, env_params, policy, cfg, sampler=smp,
-                     evals=suite)
+                     evals=suite, plan=exec_plan)
+
+    manager = None
+    if checkpoint_every > 0 or restore:
+        manager = CheckpointManager(checkpoint_dir
+                                    or f"checkpoints/{recipe.name}")
     # legacy host-callback eval only when no compiled suite exists — the
-    # suite supersedes it (and evaluating twice doubles the eval cost)
+    # suite supersedes it (and evaluating twice doubles the eval cost);
+    # seed plans skip it too (it expects unseeded params)
     eval_fn = (recipe.make_eval(environment, env_params, policy, opts)
-               if recipe.make_eval and suite is None else None)
+               if recipe.make_eval and suite is None
+               and not exec_plan.seeds else None)
 
     eval_key = jax.random.PRNGKey(opts.seed + 2)
     t0 = time.time()
 
     def callback(it, train_state, metrics, batch):
-        row = {"it": it, "loss": float(metrics["loss"]),
-               "log_z": float(metrics["log_z"]),
-               "mean_log_reward": float(metrics["mean_log_reward"])}
+        # seed plans report per-seed arrays; log the across-seed mean
+        row = {"it": it,
+               "loss": float(np.mean(np.asarray(metrics["loss"]))),
+               "log_z": float(np.mean(np.asarray(metrics["log_z"]))),
+               "mean_log_reward": float(np.mean(
+                   np.asarray(metrics["mean_log_reward"])))}
         if eval_fn is not None:
             row.update(eval_fn(eval_key, train_state.params))
         rate = (it + 1) / max(time.time() - t0, 1e-9)
@@ -144,7 +192,10 @@ def run_recipe(name: str, *, seed: int = 0,
     state, history = loop.run(jax.random.PRNGKey(opts.seed + 1),
                               opts.iterations, mode="python",
                               callback=callback,
-                              callback_every=opts.eval_every)
+                              callback_every=opts.eval_every,
+                              checkpoint=manager,
+                              checkpoint_every=checkpoint_every,
+                              restore=restore)
     out = {"recipe": recipe.name, "state": state, "history": history}
     if suite is not None:
         rows = suite.rows(state.metrics)
@@ -190,6 +241,28 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="write the eval-suite metric rows as JSON "
                          "(consumed by benchmarks/quality.py)")
+    ap.add_argument("--plan", default="single",
+                    choices=["auto", "single", "data_parallel",
+                             "vmap_seeds", "seeds_x_data"],
+                    help="execution plan: 'data_parallel' shards rollouts "
+                         "and objectives over a device mesh; 'auto' does so "
+                         "whenever >1 device is visible and the batch "
+                         "divides evenly (on CPU, set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="mesh size for data_parallel/seeds_x_data "
+                         "(default: all visible devices)")
+    ap.add_argument("--num-seeds", type=int, default=None,
+                    help="seed-axis size for vmap_seeds/seeds_x_data plans")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="PATH",
+                    help="checkpoint directory "
+                         "(default checkpoints/<recipe>)")
+    ap.add_argument("--checkpoint-every", type=int, default=0, metavar="N",
+                    help="save the full loop state every N iterations "
+                         "(0 = off)")
+    ap.add_argument("--restore", action="store_true",
+                    help="resume from the newest complete checkpoint in "
+                         "the checkpoint directory")
     ap.add_argument("--sampler", default=None,
                     choices=["on_policy", "eps_noisy", "replay",
                              "backward_replay"],
@@ -232,9 +305,14 @@ def main(argv=None) -> int:
                num_envs=args.num_envs, eval_every=args.eval_every,
                eval_batch=args.eval_batch,
                sampler=args.sampler, sampler_kwargs=sampler_kwargs,
+               plan=args.plan, devices=args.devices,
+               num_seeds=args.num_seeds,
                env=_parse_kv(args.env_overrides),
                config=_parse_kv(args.config_overrides),
-               metrics_json=args.metrics_json)
+               metrics_json=args.metrics_json,
+               checkpoint_dir=args.checkpoint_dir,
+               checkpoint_every=args.checkpoint_every,
+               restore=args.restore)
     return 0
 
 

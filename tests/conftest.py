@@ -4,3 +4,14 @@ import sys
 # make sibling test helpers (tests/_hyp.py) importable regardless of the
 # pytest import mode / invocation directory
 sys.path.insert(0, os.path.dirname(__file__))
+
+# Force 8 virtual CPU devices so the mesh-plan suite (tests/test_plan.py)
+# can exercise real shard_map programs.  This must happen before the jax
+# backend initializes (the first array op); conftest import precedes every
+# test module, so it does.  Single-device tests are unaffected — they jit
+# onto device 0 — and the dry-run tests spawn subprocesses with their own
+# XLA env.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
