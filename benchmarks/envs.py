@@ -1,0 +1,151 @@
+"""Env-transform overhead benchmark (``--only envs``).
+
+Rows (it/s = full compiled rollouts per second, hypergrid 8^4, 64 envs):
+
+  envs/hypergrid_bare             un-wrapped environment (reference)
+  envs/hypergrid_identity         identity EnvTransform stack
+  envs/hypergrid_reward_exponent  RewardExponent(beta=2.0)
+  envs/hypergrid_reward_cache     RewardCache (table lookup reward)
+
+plus reward-evaluation throughput rows (batched terminal log-reward
+evals/s) for the direct vs cached reward on the proxy-model TFBind8 env:
+
+  envs/tfbind8_reward_direct
+  envs/tfbind8_reward_cached
+
+Wrappers delegate at trace time, so the identity stack compiles to the same
+program as the bare env; CI asserts its overhead stays ≤5% (the ISSUE 5
+acceptance bar) from the perf.json written here.  The rollout variants are
+timed in *interleaved* windows (bare, identity, ... repeated) so machine
+drift on shared runners lands equally on every row and cancels out of the
+overhead ratio.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rollout import forward_rollout
+from repro.envs import apply_transforms
+from repro.envs.registry import make_env
+
+from .common import row, time_iterations
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _uniform_policy(env):
+    def apply(_params, obs):
+        return {"logits": jnp.zeros((obs.shape[0], env.action_dim),
+                                    jnp.float32)}
+    return apply
+
+
+def _rollout_step(env, num_envs=64):
+    env_params = env.init(KEY)
+    apply = _uniform_policy(env)
+
+    @jax.jit
+    def step(key):
+        key, sub = jax.random.split(key)
+        batch = forward_rollout(sub, env, env_params, apply, None, num_envs)
+        return key, batch.log_reward
+
+    return step
+
+
+def _lowered_text(env, num_envs=64):
+    env_params = env.init(KEY)
+    apply = _uniform_policy(env)
+
+    def f(key):
+        key, sub = jax.random.split(key)
+        batch = forward_rollout(sub, env, env_params, apply, None, num_envs)
+        return key, batch.log_reward
+
+    return jax.jit(f).lower(KEY).as_text()
+
+
+def _bench_interleaved(variants, n_iter, windows=9, warmup=3):
+    """Round-robin timing: ``{tag: jitted step} -> ({tag: median it/s},
+    {tag: median per-round rate ratio vs the first variant})``.
+
+    Shared-runner throughput drifts by 2-3x over a benchmark's lifetime, so
+    no single timing estimator is trustworthy for a tight bound.  The
+    overhead ratio is the *min* of two estimators — best-window ratio and
+    median-window ratio: interference only ever slows windows down, so a
+    lucky reference outlier inflates one estimator but rarely both, while a
+    real program regression shows in both.  (The identity wrapper lowers
+    to byte-identical HLO — verified by test and the ``hlo_identical``
+    row flag — so its true ratio is exactly 1; the timing rows are the
+    recorded evidence, not the guarantee.)
+    """
+    for step in variants.values():
+        key = KEY
+        for _ in range(warmup):
+            key, out = step(key)
+        jax.block_until_ready(out)
+    rates = {tag: [] for tag in variants}
+    for _ in range(max(windows, 1)):
+        for tag, step in variants.items():
+            key = KEY
+            t0 = time.perf_counter()
+            for _ in range(n_iter):
+                key, out = step(key)
+            jax.block_until_ready(out)
+            rates[tag].append(n_iter / (time.perf_counter() - t0))
+    ref = next(iter(variants))
+    best_ref, med_ref = max(rates[ref]), np.median(rates[ref])
+    ratios = {tag: float(min(best_ref / max(r),
+                             med_ref / np.median(r)))
+              for tag, r in rates.items()}
+    return {tag: float(np.median(r)) for tag, r in rates.items()}, ratios
+
+
+def _bench_reward(tag, env, n_iter, batch=512, **derived):
+    env_params = env.init(KEY)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (batch,), 0,
+                             env.num_terminal_states)
+    states = env.terminal_state_from_flat_index(idx)
+
+    @jax.jit
+    def step(x):
+        return x + 1, env.log_reward(states, env_params)
+
+    its, _ = time_iterations(step, jnp.zeros(()), n_iter)
+    return row(f"envs/{tag}", its, batch=batch, **derived)
+
+
+def run(quick: bool = True):
+    n = 40 if quick else 150
+    hg = lambda: make_env("hypergrid", dim=4, side=8)
+    variants = {
+        "hypergrid_bare": _rollout_step(hg()),
+        "hypergrid_identity":
+            _rollout_step(apply_transforms(hg(), ["identity"])),
+        "hypergrid_reward_exponent":
+            _rollout_step(apply_transforms(hg(), ["beta=2.0"])),
+        "hypergrid_reward_cache":
+            _rollout_step(apply_transforms(hg(), ["reward_cache"])),
+    }
+    rates, ratios = _bench_interleaved(variants, n,
+                                       windows=12 if quick else 20)
+    # the deterministic form of the ≤5% acceptance: the identity stack
+    # lowers to byte-identical HLO, i.e. exactly 0% program overhead —
+    # recorded per row so CI can assert it independent of timer noise
+    hlo_identical = (_lowered_text(hg()) ==
+                     _lowered_text(apply_transforms(hg(), ["identity"])))
+    rows = [row(f"envs/{tag}", its,
+                overhead_vs_bare=f"{ratios[tag]:.3f}",
+                **({"hlo_identical": hlo_identical}
+                   if tag == "hypergrid_identity" else {}))
+            for tag, its in rates.items()]
+    tf = lambda: make_env("tfbind8")
+    rows.append(_bench_reward("tfbind8_reward_direct", tf(), n))
+    rows.append(_bench_reward("tfbind8_reward_cached",
+                              apply_transforms(tf(), ["reward_cache"]), n,
+                              transform="reward_cache"))
+    return rows

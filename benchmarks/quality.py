@@ -183,7 +183,7 @@ def fig4_tfbind_qm9_tv(quick=True):
                         exploration_eps=1.0,
                         exploration_anneal_steps=iters // 2)
         params, ts, dt = _train(env, pol, cfg, iters)
-        true = jax.nn.softmax(env.reward_module.true_log_rewards(params))
+        true = jax.nn.softmax(env.true_log_rewards(params))
         b = forward_rollout(jax.random.PRNGKey(5), env, params, pol.apply,
                             ts.params, 4000)
         if name == "tfbind8":

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.optim import adamw as optim
+from repro.envs.base import EnvSpec
 from repro.rewards.amp import AMPRewardModule
 
 
@@ -41,7 +42,8 @@ def main():
     rng = np.random.RandomState(0)
     X, L, y = synthetic_dataset(rng)
     rm = AMPRewardModule()
-    params = rm.init(jax.random.PRNGKey(0))
+    spec = EnvSpec(kind="sequence", length=rm.max_len, vocab=rm.vocab)
+    params = rm.init(jax.random.PRNGKey(0), spec)
     tx = optim.adamw(args.lr, weight_decay=1e-5)
     opt = tx.init(params)
 

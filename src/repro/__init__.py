@@ -8,7 +8,7 @@ GFlowNet fine-tuning of large language-model policies.
 Public API mirrors the paper's package layout (Listing 1/2 usage works).
 """
 
-from .envs.base import Environment
+from .envs.base import Environment, EnvSpec, RewardModule, SeqTerminal
 from .envs.hypergrid import HypergridEnvironment
 from .envs.bitseq import BitSeqEnvironment
 from .envs.sequences import (AMPEnvironment, QM9Environment,
@@ -16,8 +16,13 @@ from .envs.sequences import (AMPEnvironment, QM9Environment,
 from .envs.dag import DAGEnvironment
 from .envs.ising import IsingEnvironment
 from .envs.phylo import PhyloEnvironment
+from .envs.transforms import (EnvTransform, ObservationTransform,
+                              RewardCache, RewardExponent, TimeLimit,
+                              apply_transforms, base_env)
+from .envs.registry import env_names, get_env, make_env, register_env
 from .rewards.hypergrid import (EasyHypergridRewardModule,
                                 HypergridRewardModule)
+from .rewards.bitseq import BitSeqRewardModule
 from .core.rollout import backward_rollout, forward_rollout
 from .core.trainer import (GFNConfig, train, train_compiled,
                            train_vectorized)
@@ -28,13 +33,18 @@ from .algo import (BackwardReplaySampler, DataParallelPlan,
 from .evals import (EvalSuite, ExactDistributionEval, LogZBoundsEval,
                     RewardCorrelationEval, SampledDistributionEval)
 
-__version__ = "1.2.0"
+__version__ = "1.3.0"
 
 __all__ = [
-    "Environment", "HypergridEnvironment", "BitSeqEnvironment",
+    "Environment", "EnvSpec", "RewardModule", "SeqTerminal",
+    "HypergridEnvironment", "BitSeqEnvironment",
     "AMPEnvironment", "QM9Environment", "TFBind8Environment",
     "DAGEnvironment", "IsingEnvironment", "PhyloEnvironment",
+    "EnvTransform", "ObservationTransform", "RewardExponent", "RewardCache",
+    "TimeLimit", "apply_transforms", "base_env",
+    "register_env", "get_env", "env_names", "make_env",
     "EasyHypergridRewardModule", "HypergridRewardModule",
+    "BitSeqRewardModule",
     "forward_rollout", "backward_rollout",
     "GFNConfig", "train", "train_compiled", "train_vectorized",
     "Sampler", "OnPolicySampler", "EpsilonNoisySampler", "ReplaySampler",

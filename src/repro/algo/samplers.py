@@ -89,7 +89,8 @@ class OnPolicySampler(Sampler):
 
         def sample_fn(state, key, policy_params, step):
             eps = current_eps(cfg, step)
-            batch = forward_rollout(key, env, env_params, policy_apply,
+            ep = env.update_params(env_params, step)
+            batch = forward_rollout(key, env, ep, policy_apply,
                                     policy_params, B, exploration_eps=eps,
                                     env_offset=shard.env_offset(B))
             return state, batch
@@ -129,7 +130,8 @@ class EpsilonNoisySampler(Sampler):
                 eps = self.eps * (1.0 - frac)
             else:
                 eps = jnp.asarray(self.eps, jnp.float32)
-            batch = forward_rollout(key, env, env_params, policy_apply,
+            ep = env.update_params(env_params, step)
+            batch = forward_rollout(key, env, ep, policy_apply,
                                     policy_params, B, exploration_eps=eps,
                                     env_offset=shard.env_offset(B))
             return state, batch
@@ -175,12 +177,19 @@ class ReplaySampler(Sampler):
 
     def build(self, env, env_params, policy_apply, cfg: GFNConfig,
               shard: Optional[ShardInfo] = None):
+        from ..envs.transforms import has_scheduled_reward
         shard = shard or ShardInfo()
         B = shard.split_batch(self.num_envs or cfg.num_envs)
         R = shard.split_batch(self.replay_batch or self.num_envs
                               or cfg.num_envs)
         buf = FIFOBuffer.per_shard(self.capacity, shard.num_shards,
                                    min_batch=B)
+        # under a *scheduled* reward (annealed RewardExponent) buffered
+        # log-rewards go stale for as long as an item stays in the FIFO, so
+        # replayed items re-evaluate the reward at the current β; constant
+        # rewards keep the stored value and skip the (possibly proxy-model)
+        # re-evaluation on the replay hot path
+        reuse_stored_log_r = not has_scheduled_reward(env)
 
         def init_fn():
             _, state0 = env.reset(1, env_params)
@@ -196,8 +205,12 @@ class ReplaySampler(Sampler):
             k_sel = shard.fold_shard(k_sel)
             k_replay = shard.fold_shard(k_replay)
             eps = current_eps(cfg, step)
+            # scheduled-reward transforms refresh their param leaves here
+            # (stored buffer *priorities* do stay at push-time scale —
+            # they only weight prioritized selection, not the loss)
+            ep = env.update_params(env_params, step)
             fresh, final_state = forward_rollout(
-                k_roll, env, env_params, policy_apply, policy_params, B,
+                k_roll, env, ep, policy_apply, policy_params, B,
                 exploration_eps=eps, return_final_state=True,
                 env_offset=shard.env_offset(B))
             buf_state = buf.add_batch(
@@ -211,10 +224,11 @@ class ReplaySampler(Sampler):
             else:
                 items = buf.sample(buf_state, k_sel, R)
             replayed = backward_rollout(
-                k_replay, env, env_params, policy_apply, policy_params,
+                k_replay, env, ep, policy_apply, policy_params,
                 items["state"], collect=True,
                 backward_policy=self.backward_policy,
-                known_log_reward=items["log_reward"],
+                known_log_reward=(items["log_reward"]
+                                  if reuse_stored_log_r else None),
                 with_log_pf=False).batch
             return buf_state, concat_rollout_batches(fresh, replayed)
 

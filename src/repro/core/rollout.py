@@ -35,6 +35,14 @@ uncached path, so objectives, samplers, and evals are unchanged, and cached
 vs. uncached rollouts agree to fp32 tolerance (see
 ``tests/test_rollout_cache.py``).
 
+The fast path is wrapper-transparent: :class:`repro.envs.transforms`
+wrappers copy ``supports_incremental_obs`` / ``incremental_pop_only`` from
+the env they wrap (observation-rewriting transforms clear them) and
+delegate ``observe_last``, so ``_cache_engaged`` resolves capabilities
+through any transform stack and a ``RewardExponent``/``RewardCache``-wrapped
+sequence env keeps the KV-cache rollout (parity-tested in
+``tests/test_transforms.py``).
+
 Backward rollouts reuse the same machinery where the edit regime allows
 (``env.incremental_pop_only``: backward steps only ever remove the newest
 token): the cache is built *once* from the terminal sequence with

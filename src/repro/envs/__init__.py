@@ -1,0 +1,26 @@
+"""Environments: the unified env–reward API surface.
+
+- :mod:`repro.envs.base` — the :class:`Environment` contract and the
+  :class:`RewardModule` protocol (+ the env-authoring guide in its module
+  docstring);
+- :mod:`repro.envs.transforms` — composable :class:`EnvTransform` wrappers
+  (``RewardExponent``, ``RewardCache``, ``TimeLimit``...);
+- :mod:`repro.envs.registry` — named env catalog behind
+  ``repro.run --env <name>`` / ``--list-envs``;
+- one module per concrete environment family.
+"""
+from .base import Environment, EnvSpec, RewardModule, SeqTerminal
+from .registry import (ENVS, EnvEntry, env_names, get_env, make_env,
+                       register_env)
+from .transforms import (TRANSFORMS, EnvTransform, ObservationTransform,
+                         RewardCache, RewardExponent, TimeLimit,
+                         TransformedParams, apply_transforms, base_env,
+                         parse_transform, transform_stack)
+
+__all__ = [
+    "Environment", "EnvSpec", "RewardModule", "SeqTerminal",
+    "EnvTransform", "ObservationTransform", "RewardExponent", "RewardCache",
+    "TimeLimit", "TransformedParams", "TRANSFORMS",
+    "apply_transforms", "parse_transform", "base_env", "transform_stack",
+    "ENVS", "EnvEntry", "register_env", "get_env", "env_names", "make_env",
+]

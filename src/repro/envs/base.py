@@ -1,4 +1,5 @@
-"""Base environment contract (paper §2: BaseVecEnvironment semantics).
+"""Base environment + reward contract (paper §2: BaseVecEnvironment /
+BaseRewardModule semantics).
 
 All environments are *stateless* python objects: every method is a pure
 function of ``(state, action, params)`` with a leading ``num_envs`` batch
@@ -14,11 +15,47 @@ dimension on all state fields.  Key semantics, matching the paper:
   reverse of "stop" is "un-stop" (terminal copy -> content state), which is
   the only legal backward action at a terminal copy, so a uniform/learned
   P_B assigns it probability 1.
+
+Authoring a new environment
+---------------------------
+A new scenario is four pieces, each replaceable independently:
+
+1. **State**: a ``pytree_dataclass`` with a leading batch dim on every field
+   and an int32 ``steps`` counter (``is_initial`` defaults to ``steps == 0``).
+
+2. **Reward**: a :class:`RewardModule` — ``init(key, env_spec) -> params``
+   (pure pytree) and ``log_reward(terminal_repr, params) -> (B,)``.  The
+   *terminal representation* is whatever compact pytree the environment's
+   :meth:`Environment.terminal_repr` extracts from a state (grid coordinates,
+   a :class:`SeqTerminal`, a parent-set bitmask...).  Keeping the module
+   behind this two-method surface is what makes synthetic rewards and
+   proxy-model rewards interchangeable, and what lets the wrapper layer
+   (:mod:`repro.envs.transforms`) rescale or memoize any reward without
+   knowing the environment.  Modules needing static structure (sequence
+   length, grid side) read it from the :class:`EnvSpec` handed to ``init``.
+
+3. **Dynamics**: subclass :class:`Environment`; implement ``reset``,
+   ``_forward`` / ``_backward``, ``is_terminal``, ``observe``, the two masks,
+   and the action correspondences (``get_backward_action`` /
+   ``get_forward_action``).  ``log_reward`` comes for free from the reward
+   module once ``terminal_repr`` (and, when reward params are nested inside
+   the env params, ``reward_params``) is defined.  Optional surfaces unlock
+   extra machinery: the incremental-obs protocol (``supports_incremental_obs``
+   + ``observe_last``) enables the KV-cache rollout fast path; the enumeration
+   surface (``num_terminal_states`` / ``flat_terminal_index`` /
+   ``terminal_state_from_flat_index`` / ``true_log_rewards``) enables exact-DP
+   evaluators and the :class:`~repro.envs.transforms.RewardCache` transform.
+
+4. **Registration**: add an entry in :mod:`repro.envs.registry` (name,
+   factory, default recipe) and the env becomes launchable as
+   ``python -m repro.run --env <name> --transform beta=2.0`` with any
+   transform stack and objective.
 """
 from __future__ import annotations
 
 import abc
-from typing import Any, Tuple
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +64,78 @@ from ..core.types import replace
 
 EnvState = Any
 EnvParams = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    """Static description of an environment's terminal objects, handed to
+    :meth:`RewardModule.init` so a module can size tables / networks without
+    depending on a concrete environment class.
+
+    Only the fields meaningful for the env kind are set; the rest stay None.
+    """
+    kind: str                            # "hypergrid" | "sequence" | ...
+    length: Optional[int] = None         # sequence length / #blocks / #species
+    vocab: Optional[int] = None          # per-position alphabet size
+    dim: Optional[int] = None            # hypergrid dimensions
+    side: Optional[int] = None           # hypergrid side / lattice side
+    word_bits: Optional[int] = None      # bitseq: bits per word (k)
+    num_nodes: Optional[int] = None      # bayesnet: graph nodes (d)
+    num_sites: Optional[int] = None      # phylo: alignment sites
+
+
+class SeqTerminal(NamedTuple):
+    """Terminal representation of sequence environments: left-aligned
+    ``tokens`` (B, L) int32 (pad beyond ``length``) and ``length`` (B,)."""
+    tokens: jax.Array
+    length: jax.Array
+
+
+class RewardModule(abc.ABC):
+    """Uniform reward surface (paper BaseRewardModule): every reward —
+    closed-form, table-lookup, or proxy-model — sits behind the same
+    two-method protocol, so environments, transforms, and evaluators never
+    special-case where a reward comes from.
+
+    ``init`` is called once, host-side, before any tracing; it may cache
+    static ``env_spec`` fields on the module (sequence length, grid side) but
+    everything *numeric* belongs in the returned pytree so rewards stay pure
+    functions of ``(terminal_repr, params)`` under jit/scan/shard_map.
+    """
+
+    @abc.abstractmethod
+    def init(self, key: jax.Array, env_spec: EnvSpec) -> Any:
+        """Build the reward's parameter pytree (tables, proxy weights, β...)."""
+
+    @abc.abstractmethod
+    def log_reward(self, terminal_repr: Any, params: Any) -> jax.Array:
+        """(B,) log R(x) of a batch of terminal representations."""
+
+    def true_log_rewards(self, params: Any) -> jax.Array:
+        """log R over *all* terminal objects in flat C-order, for enumerable
+        reward landscapes (exact targets, reward caches).  Optional."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not enumerate its reward landscape")
+
+def flat_index_of_tokens(tokens: jax.Array, base: int,
+                         length: int) -> jax.Array:
+    """Positional base-``base`` flat index of (…, length) token sequences,
+    C-order — the shared encoding behind ``flatten_index`` /
+    ``flat_terminal_index``, whose ordering is the lookup-key contract for
+    reward caches, exact-DP targets, and ``true_log_rewards`` tables."""
+    idx = jnp.zeros(tokens.shape[:-1], jnp.int32)
+    for i in range(length):
+        idx = idx * base + tokens[..., i]
+    return idx
+
+
+def tokens_of_flat_index(idx: jax.Array, base: int,
+                         length: int) -> jax.Array:
+    """Inverse of :func:`flat_index_of_tokens`: (…,) -> (…, length)."""
+    return jnp.stack(
+        [(idx // base ** (length - 1 - i)) % base for i in range(length)],
+        axis=-1).astype(jnp.int32)
+
 
 #: Finite stand-in for log(0) on illegal actions.  Large enough to zero out
 #: any softmax weight, small enough that sums over a trajectory stay finite —
@@ -44,6 +153,9 @@ class Environment(abc.ABC):
     backward_action_dim: int
     #: maximum trajectory length (number of forward steps incl. stop)
     max_steps: int
+    #: the env's :class:`RewardModule`; envs with intrinsic rewards may leave
+    #: this None and override :meth:`log_reward` directly
+    reward_module: Optional[RewardModule] = None
 
     # -- incremental observation protocol (rollout KV-cache fast path) ------
     #: True when each forward step changes the observation by at most one
@@ -103,9 +215,54 @@ class Environment(abc.ABC):
     def is_terminal(self, state: EnvState, params: EnvParams) -> jax.Array:
         ...
 
-    @abc.abstractmethod
+    # -- reward seam (RewardModule protocol) --------------------------------
+    def env_spec(self) -> EnvSpec:
+        """Static spec handed to :meth:`RewardModule.init`."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not declare an EnvSpec")
+
+    def terminal_repr(self, state: EnvState, params: EnvParams) -> Any:
+        """Compact terminal representation consumed by the reward module
+        (e.g. grid coordinates, :class:`SeqTerminal`, a parent bitmask)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not expose a terminal "
+            "representation")
+
+    def reward_params(self, params: EnvParams) -> Any:
+        """Reward-module slice of the env params (identity when the env
+        params *are* the reward params)."""
+        return params
+
     def log_reward(self, state: EnvState, params: EnvParams) -> jax.Array:
-        """Terminal log-reward of the current object (defined at terminals)."""
+        """Terminal log-reward of the current object (defined at terminals).
+
+        Default: route through the attached :class:`RewardModule`; envs with
+        intrinsic/incremental rewards override this directly.
+        """
+        if self.reward_module is None:
+            raise NotImplementedError(
+                f"{type(self).__name__} has no reward module and does not "
+                "override log_reward")
+        return self.reward_module.log_reward(
+            self.terminal_repr(state, params), self.reward_params(params))
+
+    def true_log_rewards(self, params: EnvParams) -> jax.Array:
+        """log R over all terminal objects (flat C-order), for enumerable
+        envs — the exact-target surface consumed by DP evaluators and
+        :class:`~repro.envs.transforms.RewardCache`."""
+        if self.reward_module is None:
+            raise NotImplementedError(
+                f"{type(self).__name__} does not enumerate terminal rewards")
+        return self.reward_module.true_log_rewards(self.reward_params(params))
+
+    def update_params(self, params: EnvParams, iteration: jax.Array
+                      ) -> EnvParams:
+        """Per-iteration env-param refresh hook (jittable; ``iteration`` is
+        the global training step).  The bare contract is a no-op; transforms
+        with scheduled state (e.g. an annealed reward exponent) override it,
+        and samplers call it once per training batch."""
+        del iteration
+        return params
 
     @abc.abstractmethod
     def observe(self, state: EnvState, params: EnvParams) -> jax.Array:

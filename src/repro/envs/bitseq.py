@@ -7,9 +7,10 @@ position and writes one of m = 2^k words: action = position * m + word.
 Terminal after exactly L steps.  Backward actions are structural (paper §2):
 "remove the word at position p" — L backward actions.
 
-Reward: R(x) = exp(-beta * min_{x' in M} d(x, x') / n) with Hamming distance
-d and a fixed mode set M of |M|=60 strings built by concatenating n/8 random
-choices from H = {00000000, 11111111, 11110000, 00001111, 00111100}.
+The min-Hamming mode reward lives in
+:class:`repro.rewards.bitseq.BitSeqRewardModule` (β is a reward knob, not an
+``EnvParams`` field); the env exposes the word sequence as its terminal
+representation.
 """
 from __future__ import annotations
 
@@ -20,42 +21,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.types import pytree_dataclass
-from .base import Environment
+from ..rewards.bitseq import (BitSeqRewardModule, make_mode_set,
+                              make_test_set, popcount as _popcount)
+from .base import (Environment, EnvSpec, flat_index_of_tokens,
+                   tokens_of_flat_index)
 
-_H_PATTERNS = np.array([
-    [0, 0, 0, 0, 0, 0, 0, 0],
-    [1, 1, 1, 1, 1, 1, 1, 1],
-    [1, 1, 1, 1, 0, 0, 0, 0],
-    [0, 0, 0, 0, 1, 1, 1, 1],
-    [0, 0, 1, 1, 1, 1, 0, 0],
-], dtype=np.int32)
-
-
-def make_mode_set(seed: int, n: int, num_modes: int = 60) -> np.ndarray:
-    """Mode set M per the paper: concatenate n/8 patterns from H."""
-    rng = np.random.RandomState(seed)
-    chunks = n // 8
-    modes = np.zeros((num_modes, n), np.int32)
-    for i in range(num_modes):
-        picks = rng.randint(0, len(_H_PATTERNS), size=chunks)
-        modes[i] = _H_PATTERNS[picks].reshape(-1)
-    return modes
-
-
-def make_test_set(seed: int, modes: np.ndarray) -> np.ndarray:
-    """Test set: for every mode and every 0 <= i < n, flip i random bits."""
-    rng = np.random.RandomState(seed + 1)
-    num_modes, n = modes.shape
-    out = np.zeros((num_modes * n, n), np.int32)
-    row = 0
-    for mi in range(num_modes):
-        for i in range(n):
-            x = modes[mi].copy()
-            flip = rng.choice(n, size=i, replace=False)
-            x[flip] = 1 - x[flip]
-            out[row] = x
-            row += 1
-    return out
+__all__ = ["BitSeqEnvironment", "BitSeqState", "BitSeqParams",
+           "make_mode_set", "make_test_set"]
 
 
 @pytree_dataclass
@@ -68,9 +40,20 @@ class BitSeqState:
 class BitSeqParams:
     n: int
     k: int
-    modes: jax.Array          # (|M|, n) bits
-    mode_words: jax.Array     # (|M|, L) word ids (for fast Hamming)
-    beta: jax.Array
+    reward_params: dict       # BitSeqRewardModule params
+
+    # back-compat accessors for the pre-RewardModule param layout
+    @property
+    def modes(self) -> jax.Array:
+        return self.reward_params["modes"]
+
+    @property
+    def mode_words(self) -> jax.Array:
+        return self.reward_params["mode_words"]
+
+    @property
+    def beta(self) -> jax.Array:
+        return self.reward_params["beta"]
 
 
 class BitSeqEnvironment(Environment):
@@ -83,7 +66,8 @@ class BitSeqEnvironment(Environment):
     incremental_pop_only = False
 
     def __init__(self, n: int = 120, k: int = 8, beta: float = 3.0,
-                 num_modes: int = 60, seed: int = 0):
+                 num_modes: int = 60, seed: int = 0,
+                 reward_module: BitSeqRewardModule | None = None):
         assert n % k == 0
         assert n % 8 == 0, "mode set is built from 8-bit patterns (paper H)"
         self.n, self.k = n, k
@@ -93,20 +77,22 @@ class BitSeqEnvironment(Environment):
         self.beta = beta
         self.num_modes = num_modes
         self.seed = seed
+        self.reward_module = reward_module or BitSeqRewardModule(
+            beta=beta, num_modes=num_modes, seed=seed, word_bits=k,
+            length=self.L)
         self.action_dim = self.L * self.m
         self.backward_action_dim = self.L
         self.max_steps = self.L
         self.vocab_size = self.m + 1   # + empty token (for policies)
 
+    def env_spec(self) -> EnvSpec:
+        return EnvSpec(kind="bitseq", length=self.L, vocab=self.m,
+                       word_bits=self.k)
+
     def init(self, key: jax.Array) -> BitSeqParams:
-        modes = make_mode_set(self.seed, self.n, self.num_modes)
-        # word id per k-bit block, MSB-first
-        pw = 2 ** np.arange(self.k - 1, -1, -1)
-        mode_words = (modes.reshape(-1, self.L, self.k) * pw).sum(-1)
-        return BitSeqParams(n=self.n, k=self.k,
-                            modes=jnp.asarray(modes),
-                            mode_words=jnp.asarray(mode_words, jnp.int32),
-                            beta=jnp.float32(self.beta))
+        return BitSeqParams(
+            n=self.n, k=self.k,
+            reward_params=self.reward_module.init(key, self.env_spec()))
 
     def reset(self, num_envs: int, params) -> Tuple[jax.Array, BitSeqState]:
         state = BitSeqState(
@@ -130,20 +116,16 @@ class BitSeqEnvironment(Environment):
     def is_terminal(self, state, params):
         return state.steps >= self.L
 
-    def log_reward(self, state, params):
-        """-beta * min Hamming(x, M) / n via per-word popcount table."""
-        # words differ -> hamming of the k-bit blocks
-        x = state.tokens[:, None, :]                     # (B, 1, L)
-        m = params.mode_words[None, :, :]                # (1, |M|, L)
-        xor = jnp.bitwise_xor(x, m)
-        ham = _popcount(xor, self.k).sum(-1)             # (B, |M|)
-        dmin = jnp.min(ham, axis=-1).astype(jnp.float32)
-        return -params.beta * dmin / self.n
+    # -- reward seam --------------------------------------------------------
+    def terminal_repr(self, state: BitSeqState, params) -> jax.Array:
+        return state.tokens
+
+    def reward_params(self, params: BitSeqParams) -> dict:
+        return params.reward_params
 
     def log_reward_of_words(self, words: jax.Array, params) -> jax.Array:
-        xor = jnp.bitwise_xor(words[:, None, :], params.mode_words[None])
-        ham = _popcount(xor, self.k).sum(-1)
-        return -params.beta * jnp.min(ham, -1).astype(jnp.float32) / self.n
+        return self.reward_module.log_reward(words,
+                                             self.reward_params(params))
 
     def observe(self, state, params):
         return state.tokens
@@ -181,13 +163,40 @@ class BitSeqEnvironment(Environment):
                            steps=jnp.full((B,), self.L, jnp.int32))
 
     # -- exact target (small instances; paper §B.2 TV evaluation) ----------
+    @property
+    def num_terminal_states(self) -> int:
+        return self.m ** self.L
+
     def flatten_index(self, tokens: jax.Array) -> jax.Array:
         """Base-m flat index of a full word sequence, matching
         ``true_distribution`` / ``repro.evals.make_bitseq_dp`` ordering."""
-        idx = jnp.zeros(tokens.shape[:-1], jnp.int32)
-        for i in range(self.L):
-            idx = idx * self.m + tokens[..., i]
-        return idx
+        return flat_index_of_tokens(tokens, self.m, self.L)
+
+    def flat_terminal_index(self, state: BitSeqState, params) -> jax.Array:
+        # empty tokens (== m) only appear in non-terminal states, whose
+        # reward is masked anyway; clip keeps the lookup in-range there.
+        return self.flatten_index(jnp.clip(state.tokens, 0, self.m - 1))
+
+    def terminal_state_from_flat_index(self, idx: jax.Array) -> BitSeqState:
+        return self.terminal_state_from_words(
+            tokens_of_flat_index(idx, self.m, self.L))
+
+    def _enumerate_words(self, max_states: int) -> jax.Array:
+        num = self.m ** self.L
+        if num > max_states:
+            raise ValueError(
+                f"bitseq has {num} terminal states > {max_states}; "
+                "exact target is only available for small instances")
+        return jnp.stack(jnp.meshgrid(
+            *[jnp.arange(self.m)] * self.L, indexing="ij"),
+            axis=-1).reshape(-1, self.L).astype(jnp.int32)
+
+    def true_log_rewards(self, params: BitSeqParams,
+                         max_states: int = 1 << 22) -> jax.Array:
+        """log R over all m^L terminal words (flat base-m C-order); small
+        instances only."""
+        return self.log_reward_of_words(self._enumerate_words(max_states),
+                                        params)
 
     def true_distribution(self, params: BitSeqParams,
                           max_states: int = 1 << 22) -> jax.Array:
@@ -196,19 +205,4 @@ class BitSeqEnvironment(Environment):
         Only feasible for small instances (m**L states enumerated); raises
         for larger ones — use sampling evaluators there.
         """
-        num = self.m ** self.L
-        if num > max_states:
-            raise ValueError(
-                f"bitseq has {num} terminal states > {max_states}; "
-                "exact target is only available for small instances")
-        words = jnp.stack(jnp.meshgrid(
-            *[jnp.arange(self.m)] * self.L, indexing="ij"),
-            axis=-1).reshape(-1, self.L).astype(jnp.int32)
-        return jax.nn.softmax(self.log_reward_of_words(words, params))
-
-
-def _popcount(x: jax.Array, bits: int) -> jax.Array:
-    c = jnp.zeros_like(x)
-    for i in range(bits):
-        c = c + ((x >> i) & 1)
-    return c
+        return jax.nn.softmax(self.true_log_rewards(params, max_states))

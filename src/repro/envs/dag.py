@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from ..core.types import pytree_dataclass
 from ..rewards.bayesnet import BayesNetRewardModule
-from .base import Environment
+from .base import Environment, EnvSpec
 
 
 @pytree_dataclass
@@ -48,8 +48,11 @@ class DAGEnvironment(Environment):
         self.backward_action_dim = d * d + 1  # edge removals + un-stop
         self.max_steps = d * (d - 1) // 2 + 1
 
+    def env_spec(self) -> EnvSpec:
+        return EnvSpec(kind="dag", num_nodes=self.d)
+
     def init(self, key: jax.Array) -> dict:
-        return self.reward_module.init(key)
+        return self.reward_module.init(key, self.env_spec())
 
     def reset(self, num_envs: int, params) -> Tuple[jax.Array, DAGState]:
         d = self.d
@@ -134,7 +137,13 @@ class DAGEnvironment(Environment):
         return jnp.logical_and(state.num_edges == 0,
                                jnp.logical_not(state.stopped))
 
+    def terminal_repr(self, state: DAGState, params) -> jax.Array:
+        return state.pa_mask
+
     def log_reward(self, state: DAGState, params):
+        # incremental delta-score accumulator (Eq. 13): O(1) per step where
+        # the RewardModule's direct evaluation is O(d); both agree exactly
+        # (tests/test_transforms.py)
         return state.log_r
 
     def observe(self, state: DAGState, params):

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from ..core.types import pytree_dataclass, replace
 from ..rewards.hypergrid import HypergridRewardModule, EasyHypergridRewardModule
-from .base import Environment
+from .base import Environment, EnvSpec
 
 
 @pytree_dataclass
@@ -39,15 +39,19 @@ class HypergridEnvironment(Environment):
         self.dim = dim
         self.side = side
         self.action_dim = dim + 1          # d increments + stop (last)
+        self.stop_action = dim
         self.backward_action_dim = dim + 1  # d decrements + un-stop (last)
         self.max_steps = dim * (side - 1) + 1
         self.obs_dim = dim * side
 
     # -- setup --------------------------------------------------------------
+    def env_spec(self) -> EnvSpec:
+        return EnvSpec(kind="hypergrid", dim=self.dim, side=self.side)
+
     def init(self, key: jax.Array) -> HypergridParams:
         return HypergridParams(
             dim=self.dim, side=self.side,
-            reward_params=self.reward_module.init(key, self.dim, self.side))
+            reward_params=self.reward_module.init(key, self.env_spec()))
 
     def reset(self, num_envs: int, params: HypergridParams
               ) -> Tuple[jax.Array, HypergridState]:
@@ -85,9 +89,11 @@ class HypergridEnvironment(Environment):
         return jnp.logical_and(jnp.all(state.pos == 0, axis=-1),
                                jnp.logical_not(state.terminal))
 
-    def log_reward(self, state: HypergridState, params) -> jax.Array:
-        return self.reward_module.log_reward(state.pos, params.reward_params,
-                                             self.side)
+    def terminal_repr(self, state: HypergridState, params) -> jax.Array:
+        return state.pos
+
+    def reward_params(self, params: HypergridParams):
+        return params.reward_params
 
     def observe(self, state: HypergridState, params) -> jax.Array:
         oh = jax.nn.one_hot(state.pos, self.side)          # (B, d, H)
@@ -115,14 +121,25 @@ class HypergridEnvironment(Environment):
         return bwd_action  # symmetric action indexing
 
     # -- exact target (for TV metric; paper computes it in closed form) -----
-    def true_distribution(self, params: HypergridParams) -> jax.Array:
-        """Exact R(x)/Z over all H^d terminal states (flattened C-order)."""
+    @property
+    def num_terminal_states(self) -> int:
+        return self.side ** self.dim
+
+    def true_log_rewards(self, params: HypergridParams) -> jax.Array:
+        """log R over all H^d terminal states (flattened C-order)."""
         grids = jnp.stack(jnp.meshgrid(
             *[jnp.arange(self.side)] * self.dim, indexing="ij"),
             axis=-1).reshape(-1, self.dim)
-        lr = self.reward_module.log_reward(grids, params.reward_params,
-                                           self.side)
-        return jax.nn.softmax(lr)
+        return self.reward_module.log_reward(grids, params.reward_params)
+
+    def true_distribution(self, params: HypergridParams) -> jax.Array:
+        """Exact R(x)/Z over all H^d terminal states (flattened C-order)."""
+        return jax.nn.softmax(self.true_log_rewards(params))
+
+    def flat_terminal_index(self, state: HypergridState, params) -> jax.Array:
+        """(B,) flat C-order index of a (terminal) state — the RewardCache
+        lookup key, matching ``true_log_rewards`` ordering."""
+        return self.flatten_index(state.pos)
 
     def flatten_index(self, pos: jax.Array) -> jax.Array:
         """C-order flat index of grid coordinates, matching

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.types import pytree_dataclass
-from .base import Environment
+from .base import Environment, EnvSpec, RewardModule
 
 
 def toroidal_adjacency(n: int) -> np.ndarray:
@@ -40,19 +40,41 @@ class IsingState:
     steps: jax.Array     # (B,)
 
 
+class IsingGibbsRewardModule(RewardModule):
+    """Gibbs reward log R(x) = x^T J x with a fixed toroidal-lattice coupling
+    J = sigma * A_N.  In the EB-GFN setting J is *learned*: the same module
+    scores whatever ``params["J"]`` the energy model currently holds."""
+
+    def __init__(self, sigma: float = -0.1):
+        self.sigma = sigma
+
+    def init(self, key: jax.Array, env_spec: EnvSpec) -> dict:
+        del key
+        J = self.sigma * toroidal_adjacency(int(env_spec.side))
+        return {"J": jnp.asarray(J, jnp.float32)}
+
+    def log_reward(self, spins: jax.Array, params: dict) -> jax.Array:
+        x = spins.astype(jnp.float32)
+        return jnp.einsum('bi,ij,bj->b', x, params["J"], x)
+
+
 class IsingEnvironment(Environment):
 
-    def __init__(self, n: int = 9, sigma: float = -0.1):
+    def __init__(self, n: int = 9, sigma: float = -0.1,
+                 reward_module: IsingGibbsRewardModule | None = None):
         self.n = n
         self.D = n * n
         self.sigma = sigma
+        self.reward_module = reward_module or IsingGibbsRewardModule(sigma)
         self.action_dim = 2 * self.D
         self.backward_action_dim = self.D
         self.max_steps = self.D
 
+    def env_spec(self) -> EnvSpec:
+        return EnvSpec(kind="ising", side=self.n)
+
     def init(self, key: jax.Array) -> dict:
-        J = self.sigma * toroidal_adjacency(self.n)
-        return {"J": jnp.asarray(J, jnp.float32)}
+        return self.reward_module.init(key, self.env_spec())
 
     def reset(self, num_envs: int, params) -> Tuple[jax.Array, IsingState]:
         state = IsingState(
@@ -75,11 +97,10 @@ class IsingEnvironment(Environment):
     def is_terminal(self, state, params):
         return state.steps >= self.D
 
-    def log_reward(self, state, params):
-        """log R(x) = x^T J x (zeros in partial states contribute nothing,
-        so this expression is also the natural FLDB energy shaping)."""
-        x = state.spins.astype(jnp.float32)
-        return jnp.einsum('bi,ij,bj->b', x, params["J"], x)
+    def terminal_repr(self, state: IsingState, params) -> jax.Array:
+        # zeros in partial states contribute nothing to x^T J x, so the
+        # module's log_reward is also the natural FLDB energy shaping
+        return state.spins
 
     def energy(self, state, params):
         """Forward-looking energy: E(s) = -s^T J s, E(s0) = 0."""

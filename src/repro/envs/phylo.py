@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.types import pytree_dataclass
-from .base import Environment
+from .base import Environment, EnvSpec, RewardModule
 
 # (species, sites) of the 8 PhyloGFN benchmark alignments
 DS_DIMS = {
@@ -73,6 +73,23 @@ def make_pair_table(num_slots: int) -> Tuple[np.ndarray, np.ndarray]:
     return np.asarray(pairs, np.int32), pair_index
 
 
+class ParsimonyRewardModule(RewardModule):
+    """Rescaled Gibbs parsimony reward (paper §B.3):
+    log R(x) = (C - M(x)) / alpha over accumulated mutation counts M."""
+
+    def __init__(self, alpha: float = 4.0, reward_c: float = 0.0):
+        self.alpha = alpha
+        self.reward_c = reward_c
+
+    def init(self, key: jax.Array, env_spec: EnvSpec) -> dict:
+        del key, env_spec
+        return {"alpha": jnp.float32(self.alpha),
+                "C": jnp.float32(self.reward_c)}
+
+    def log_reward(self, score: jax.Array, params: dict) -> jax.Array:
+        return (params["C"] - score) / params["alpha"]
+
+
 @pytree_dataclass
 class PhyloState:
     node_fitch: jax.Array     # (B, 2n-1, S) uint8 bitmask in 1..15 (0=empty)
@@ -87,12 +104,15 @@ class PhyloState:
 class PhyloEnvironment(Environment):
 
     def __init__(self, n_species: int, n_sites: int, alpha: float = 4.0,
-                 reward_c: float = 0.0, seed: int = 0):
+                 reward_c: float = 0.0, seed: int = 0,
+                 reward_module: ParsimonyRewardModule | None = None):
         self.n = n_species
         self.sites = n_sites
         self.alpha = alpha
         self.reward_c = reward_c
         self.seed = seed
+        self.reward_module = reward_module or ParsimonyRewardModule(
+            alpha=alpha, reward_c=reward_c)
         self.num_slots = 2 * n_species - 1
         pairs, pair_index = make_pair_table(self.num_slots)
         self.pairs = jnp.asarray(pairs)
@@ -109,12 +129,14 @@ class PhyloEnvironment(Environment):
         return cls(n_species or ns, n_sites or st, alpha=alpha,
                    reward_c=DS_REWARD_C[ds], seed=seed + 100 * ds)
 
+    def env_spec(self) -> EnvSpec:
+        return EnvSpec(kind="phylo", length=self.n, num_sites=self.sites)
+
     def init(self, key: jax.Array) -> dict:
         aln = synth_alignment(self.seed, self.n, self.sites)
         leaf_fitch = (1 << aln).astype(np.uint8)     # one-hot bitmask
         return {"leaf_fitch": jnp.asarray(leaf_fitch),
-                "alpha": jnp.float32(self.alpha),
-                "C": jnp.float32(self.reward_c)}
+                **self.reward_module.init(key, self.env_spec())}
 
     def reset(self, num_envs: int, params) -> Tuple[jax.Array, PhyloState]:
         B, K, S = num_envs, self.num_slots, self.sites
@@ -194,8 +216,8 @@ class PhyloEnvironment(Environment):
     def is_initial(self, state, params):
         return state.merges == 0
 
-    def log_reward(self, state, params):
-        return (params["C"] - state.score) / params["alpha"]
+    def terminal_repr(self, state: PhyloState, params) -> jax.Array:
+        return state.score
 
     def energy(self, state, params):
         """FLDB shaping: E(s0)=0, E(x) = -log R(x)."""

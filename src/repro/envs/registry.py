@@ -1,0 +1,185 @@
+"""Environment registry: every paper benchmark env as one registration,
+mirroring the recipe registry (:mod:`repro.recipes.base`).
+
+An :class:`EnvEntry` names a factory, a default recipe (the objective/policy
+bundle that drives the env from the CLI), the small-instance overrides used
+by smoke/matrix jobs, and which transforms are constructible on it — so any
+registered env × transform stack × objective is launchable as::
+
+    python -m repro.run --env hypergrid --transform beta=2.0
+    python -m repro.run --list-envs
+
+``--set key=value`` overrides forward to the factory exactly as they do for
+a recipe's ``make_env``.  Registering a new env is one call::
+
+    from repro.envs.registry import EnvEntry, register_env
+
+    register_env(EnvEntry(
+        name="my_env", description="...", make=MyEnvironment,
+        recipe="my_env_tb"))
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+ENVS: Dict[str, "EnvEntry"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvEntry:
+    """One registered environment.
+
+    make(**overrides)  -> Environment (bare; transforms wrap on top)
+    recipe             default recipe name driving this env from the CLI
+    smoke_overrides    factory overrides for a seconds-scale instance
+    transforms         transform names constructible on the smoke instance
+                       (the env-matrix CI job steps each of them)
+    """
+    name: str
+    description: str
+    make: Callable[..., Any]
+    recipe: str
+    smoke_overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    transforms: Tuple[str, ...] = ("identity", "reward_exponent")
+
+
+def register_env(entry: EnvEntry) -> EnvEntry:
+    """Add an env to the global registry (idempotent by name)."""
+    ENVS[entry.name] = entry
+    return entry
+
+
+def get_env(name: str) -> EnvEntry:
+    if name not in ENVS:
+        raise KeyError(f"unknown env {name!r}; available: {env_names()}")
+    return ENVS[name]
+
+
+def env_names() -> list:
+    return sorted(ENVS)
+
+
+def make_env(name: str, transforms: Tuple[str, ...] = (), **overrides):
+    """Build a registered env, optionally wrapped in a transform stack."""
+    from .transforms import apply_transforms
+    env = get_env(name).make(**overrides)
+    return apply_transforms(env, transforms)
+
+
+# ---------------------------------------------------------------------------
+# Built-in catalog (paper §3): factories mirror the recipe defaults
+# ---------------------------------------------------------------------------
+
+def _hypergrid(dim: int = 4, side: int = 8):
+    from ..rewards.hypergrid import HypergridRewardModule
+    from .hypergrid import HypergridEnvironment
+    return HypergridEnvironment(HypergridRewardModule(), dim=dim, side=side)
+
+
+def _bitseq(n: int = 120, k: int = 8, beta: float = 3.0, seed: int = 0):
+    from .bitseq import BitSeqEnvironment
+    return BitSeqEnvironment(n=n, k=k, beta=beta, seed=seed)
+
+
+def _tfbind8():
+    from .sequences import TFBind8Environment
+    return TFBind8Environment()
+
+
+def _qm9():
+    from .sequences import QM9Environment
+    return QM9Environment()
+
+
+def _amp(max_len: int = 60):
+    from .sequences import AMPEnvironment
+    return AMPEnvironment(max_len=max_len)
+
+
+def _dag(d: int = 5, score: str = "bge", num_samples: int = 100,
+         seed: int = 0):
+    from ..rewards.bayesnet import BayesNetRewardModule
+    from .dag import DAGEnvironment
+    rm = BayesNetRewardModule(d=d, num_samples=num_samples, score=score,
+                              seed=seed)
+    return DAGEnvironment(reward_module=rm, d=d)
+
+
+def _phylo(ds: int = 1, reduced: bool = False, seed: int = 0):
+    from .phylo import PhyloEnvironment
+    if reduced:
+        return PhyloEnvironment(n_species=10, n_sites=100, alpha=4.0,
+                                reward_c=100.0, seed=seed)
+    return PhyloEnvironment.from_dataset(ds, seed=seed)
+
+
+def _ising(n: int = 9, sigma: float = -0.1):
+    from .ising import IsingEnvironment
+    return IsingEnvironment(n=n, sigma=sigma)
+
+
+register_env(EnvEntry(
+    name="hypergrid",
+    description="d-dim hypergrid with the Bengio et al. 2021 mode reward "
+                "(paper §3.1)",
+    make=_hypergrid, recipe="hypergrid_tb",
+    smoke_overrides={"dim": 2, "side": 6},
+    transforms=("identity", "reward_exponent", "reward_cache",
+                "time_limit:limit=8")))
+
+register_env(EnvEntry(
+    name="bitseq",
+    description="non-autoregressive n-bit sequences, min-Hamming mode "
+                "reward (paper §3.2)",
+    make=_bitseq, recipe="bitseq_tb",
+    smoke_overrides={"n": 16, "k": 4},
+    transforms=("identity", "reward_exponent", "reward_cache")))
+
+register_env(EnvEntry(
+    name="tfbind8",
+    description="DNA binding-activity sequences, length 8, vocab 4 "
+                "(paper §3.3)",
+    make=_tfbind8, recipe="tfbind8_tb",
+    transforms=("identity", "reward_exponent", "reward_cache")))
+
+register_env(EnvEntry(
+    name="qm9",
+    description="prepend/append small molecules, 5 blocks from 11 words, "
+                "proxy HOMO-LUMO reward (paper §3.4)",
+    make=_qm9, recipe="qm9_tb",
+    transforms=("identity", "reward_exponent", "reward_cache")))
+
+register_env(EnvEntry(
+    name="amp",
+    description="variable-length antimicrobial peptides <= 60 tokens, "
+                "proxy classifier reward (paper §3.5)",
+    make=_amp, recipe="amp_tb",
+    smoke_overrides={"max_len": 12},
+    transforms=("identity", "reward_exponent", "time_limit:limit=8")))
+
+register_env(EnvEntry(
+    name="phylo",
+    description="phylogenetic tree generation, Fitch parsimony Gibbs "
+                "reward (paper §3.6)",
+    make=_phylo, recipe="phylo_fldb",
+    smoke_overrides={"reduced": True},
+    transforms=("identity", "reward_exponent")))
+
+register_env(EnvEntry(
+    name="dag",
+    description="Bayesian-network structure learning, BGe/linear-Gaussian "
+                "modular score (paper §3.7)",
+    make=_dag, recipe="dag_mdb",
+    smoke_overrides={"d": 4},
+    transforms=("identity", "reward_exponent")))
+
+register_env(EnvEntry(
+    name="ising",
+    description="Ising lattice with Gibbs coupling reward; EB-GFN learns J "
+                "jointly (paper §3.8)",
+    make=_ising, recipe="ising_ebgfn",
+    smoke_overrides={"n": 4, "sigma": 0.2},
+    # the EB-GFN driver owns the reward params (learned J); only
+    # param-free wrappers compose with it
+    transforms=("identity",)))

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.types import pytree_dataclass
-from .base import Environment
+from .base import (Environment, EnvSpec, SeqTerminal, flat_index_of_tokens,
+                   tokens_of_flat_index)
 
 
 # ===========================================================================
@@ -48,8 +49,11 @@ class AutoregressiveEnvironment(Environment):
         self.max_steps = length
         self.vocab_size = vocab + 1
 
+    def env_spec(self) -> EnvSpec:
+        return EnvSpec(kind="sequence", length=self.length, vocab=self.vocab)
+
     def init(self, key):
-        return self.reward_module.init(key)
+        return self.reward_module.init(key, self.env_spec())
 
     def reset(self, num_envs, params):
         state = SeqState(
@@ -76,9 +80,8 @@ class AutoregressiveEnvironment(Environment):
     def is_terminal(self, state, params):
         return state.length >= self.length
 
-    def log_reward(self, state, params):
-        return self.reward_module.log_reward(state.tokens, state.length,
-                                             params)
+    def terminal_repr(self, state: SeqState, params) -> SeqTerminal:
+        return SeqTerminal(tokens=state.tokens, length=state.length)
 
     def observe(self, state, params):
         return state.tokens
@@ -120,11 +123,21 @@ class TFBind8Environment(AutoregressiveEnvironment):
             reward_module = TFBind8RewardModule()
         super().__init__(reward_module, length=8, vocab=4)
 
+    @property
+    def num_terminal_states(self) -> int:
+        return self.vocab ** self.length
+
     def flatten_index(self, tokens: jax.Array) -> jax.Array:
-        idx = jnp.zeros(tokens.shape[:-1], jnp.int32)
-        for i in range(self.length):
-            idx = idx * self.vocab + tokens[..., i]
-        return idx
+        return flat_index_of_tokens(tokens, self.vocab, self.length)
+
+    def flat_terminal_index(self, state: SeqState, params) -> jax.Array:
+        # pad tokens (== vocab) only appear pre-terminal; clip keeps the
+        # RewardCache lookup in-range there (values masked by the rollout)
+        return self.flatten_index(jnp.clip(state.tokens, 0, self.vocab - 1))
+
+    def terminal_state_from_flat_index(self, idx: jax.Array) -> SeqState:
+        return self.terminal_state_from_tokens(
+            tokens_of_flat_index(idx, self.vocab, self.length))
 
 
 # ===========================================================================
@@ -154,8 +167,12 @@ class VariableLengthSeqEnvironment(Environment):
         self.max_steps = max_len + 1
         self.vocab_size = vocab + 1
 
+    def env_spec(self) -> EnvSpec:
+        return EnvSpec(kind="sequence", length=self.max_len,
+                       vocab=self.vocab)
+
     def init(self, key):
-        return self.reward_module.init(key)
+        return self.reward_module.init(key, self.env_spec())
 
     def reset(self, num_envs, params):
         state = SeqState(
@@ -199,9 +216,8 @@ class VariableLengthSeqEnvironment(Environment):
         return jnp.logical_and(state.length == 0,
                                jnp.logical_not(state.stopped))
 
-    def log_reward(self, state, params):
-        return self.reward_module.log_reward(state.tokens, state.length,
-                                             params)
+    def terminal_repr(self, state: SeqState, params) -> SeqTerminal:
+        return SeqTerminal(tokens=state.tokens, length=state.length)
 
     def observe(self, state, params):
         return state.tokens
@@ -288,8 +304,11 @@ class PrependAppendEnvironment(Environment):
         self.max_steps = length
         self.vocab_size = vocab + 1
 
+    def env_spec(self) -> EnvSpec:
+        return EnvSpec(kind="sequence", length=self.length, vocab=self.vocab)
+
     def init(self, key):
-        return self.reward_module.init(key)
+        return self.reward_module.init(key, self.env_spec())
 
     def reset(self, num_envs, params):
         W = 2 * self.length
@@ -342,9 +361,10 @@ class PrependAppendEnvironment(Environment):
         valid = jnp.arange(self.length)[None] < self.seq_length(state)[:, None]
         return jnp.where(valid, toks, self.pad)
 
-    def log_reward(self, state, params):
-        return self.reward_module.log_reward(
-            self.tokens_left_aligned(state), self.seq_length(state), params)
+    def terminal_repr(self, state: PrependAppendState,
+                      params) -> SeqTerminal:
+        return SeqTerminal(tokens=self.tokens_left_aligned(state),
+                           length=self.seq_length(state))
 
     def observe(self, state, params):
         return self.tokens_left_aligned(state)
@@ -391,8 +411,19 @@ class QM9Environment(PrependAppendEnvironment):
             reward_module = QM9RewardModule()
         super().__init__(reward_module, length=5, vocab=11)
 
+    @property
+    def num_terminal_states(self) -> int:
+        return self.vocab ** self.length
+
     def flatten_index(self, tokens: jax.Array) -> jax.Array:
-        idx = jnp.zeros(tokens.shape[:-1], jnp.int32)
-        for i in range(self.length):
-            idx = idx * self.vocab + tokens[..., i]
-        return idx
+        return flat_index_of_tokens(tokens, self.vocab, self.length)
+
+    def flat_terminal_index(self, state: PrependAppendState,
+                            params) -> jax.Array:
+        toks = self.tokens_left_aligned(state)
+        return self.flatten_index(jnp.clip(toks, 0, self.vocab - 1))
+
+    def terminal_state_from_flat_index(self, idx: jax.Array
+                                       ) -> PrependAppendState:
+        return self.terminal_state_from_tokens(
+            tokens_of_flat_index(idx, self.vocab, self.length))

@@ -1,0 +1,495 @@
+"""Composable environment transforms (torchgfn-style wrapper layer).
+
+An :class:`EnvTransform` wraps an :class:`~repro.envs.base.Environment` and
+preserves its *entire* contract — dynamics, masks, action correspondences,
+``all_states_terminal`` / ``energy`` extras, and the incremental-observation
+protocol behind the KV-cache rollout fast path — so a wrapped env drops into
+every rollout, objective, sampler, evaluator, and execution plan unchanged.
+Wrappers are pure-pytree: any state a transform carries (a reward exponent,
+a memo table) lives in a :class:`TransformedParams` layer of the env-params
+pytree, never on the python object, so transformed envs stay jit/scan/
+``shard_map``-safe and replicate across device meshes like bare ones.
+
+Ships four transforms plus the identity base:
+
+- :class:`RewardExponent` — log R ↦ β·log R (reward temperature 1/β; Shen et
+  al. 2023's most-wanted experimental knob), with an optional linear anneal
+  β→``final_beta`` over ``anneal_steps`` training iterations, threaded
+  through :meth:`Environment.update_params` which every sampler calls once
+  per batch.  Consistency is structural: objectives consume the trajectory's
+  stored log-rewards (produced by the wrapped ``step``), the exact-DP
+  evaluators compare against the wrapped ``true_distribution`` ∝ R^β, the
+  ELBO/EUBO/log-Z bounds and FLDB energies all flow through the wrapped
+  ``log_reward`` / ``energy`` — no consumer can see the un-exponentiated
+  reward by accident.
+- :class:`RewardCache` — memoizes expensive terminal rewards (proxy models)
+  into a flat table at ``init`` for enumerable envs; ``log_reward`` becomes
+  one gather.
+- :class:`TimeLimit` — caps trajectory length; below the env's natural
+  horizon it forces the stop action (envs with a ``stop_action`` only).
+- :class:`ObservationTransform` — identity base for observation rewrites
+  (subclasses override :meth:`~ObservationTransform.transform_obs`; doing so
+  disables the incremental-obs fast path, whose per-token cache appends
+  cannot see a whole-observation rewrite).
+
+Stacks compose left-to-right innermost-first:
+``RewardExponent(RewardCache(env), beta=2.0)`` caches raw proxy rewards and
+exponentiates the cached values.  From the CLI every registered env accepts
+``--transform`` specs (see :func:`parse_transform`):
+
+    python -m repro.run --env hypergrid --transform beta=2.0
+    python -m repro.run --env tfbind8 \
+        --transform reward_cache --transform "reward_exponent:beta=0.5"
+
+An identity stack is *exactly* free: delegation happens at trace time, so
+the compiled program — and therefore every sampled trajectory and metric
+row — is identical to the bare env's (property-tested across the registry
+in ``tests/test_transforms.py``; overhead asserted ≤5% by
+``benchmarks/run.py --only envs``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import pytree_dataclass
+from .base import Environment, EnvSpec
+
+
+@pytree_dataclass
+class TransformedParams:
+    """One params layer added by a state-carrying transform: the wrapped
+    env's params plus this transform's own leaves (β, memo table...).
+
+    Attribute/item reads fall through to ``inner`` so host-side code poking
+    env-specific param fields (``params.modes``, ``params["table"]``) keeps
+    working on transformed params.
+    """
+    inner: Any
+    extra: Dict[str, Any]
+
+    def __getattr__(self, name):
+        try:
+            inner = self.__dict__["inner"]
+        except KeyError:          # during construction / copy protocols
+            raise AttributeError(name)
+        return getattr(inner, name)
+
+    def __getitem__(self, key):
+        return self.__dict__["inner"][key]
+
+
+class EnvTransform(Environment):
+    """Identity wrapper: delegates the full Environment contract.
+
+    Subclasses override the methods they transform; everything else —
+    including env-specific helpers (``flatten_index``, ``vocab_size``,
+    ``terminal_state_from_*``...) reached through ``__getattr__`` — falls
+    through to the wrapped env.  Subclasses that carry params set
+    ``wraps_params = True``, add one :class:`TransformedParams` layer in
+    ``init``, and receive the unwrapped inner params via
+    :meth:`inner_params` in every delegated call.
+    """
+
+    #: registry key / CLI name, set on subclasses
+    name = "identity"
+    #: True when init() adds a TransformedParams layer
+    wraps_params = False
+
+    def __init__(self, env: Environment):
+        self.env = env
+        self.action_dim = env.action_dim
+        self.backward_action_dim = env.backward_action_dim
+        self.max_steps = env.max_steps
+        self.supports_incremental_obs = env.supports_incremental_obs
+        self.incremental_pop_only = env.incremental_pop_only
+        self.reward_module = getattr(env, "reward_module", None)
+        # `energy` must only exist on the wrapper when the wrapped env has
+        # it — rollouts hasattr-gate on it — so it is instance-bound rather
+        # than a class method (subclasses customize via _energy).
+        if hasattr(env, "energy"):
+            self.energy = self._energy
+
+    def __getattr__(self, name):
+        try:
+            env = self.__dict__["env"]
+        except KeyError:
+            raise AttributeError(name)
+        return getattr(env, name)
+
+    # -- params plumbing -----------------------------------------------------
+    def inner_params(self, params):
+        """The wrapped env's slice of ``params``."""
+        return params.inner if self.wraps_params else params
+
+    def _init_extra(self, key: jax.Array, inner_params) -> Dict[str, Any]:
+        """Transform-owned param leaves (wraps_params subclasses)."""
+        return {}
+
+    def _update_extra(self, extra: Dict[str, Any], iteration: jax.Array
+                      ) -> Dict[str, Any]:
+        """Per-iteration refresh of the transform's own leaves."""
+        del iteration
+        return extra
+
+    def init(self, key: jax.Array):
+        inner = self.env.init(key)
+        if not self.wraps_params:
+            return inner
+        return TransformedParams(inner=inner,
+                                 extra=self._init_extra(key, inner))
+
+    def update_params(self, params, iteration: jax.Array):
+        inner = self.env.update_params(self.inner_params(params), iteration)
+        if not self.wraps_params:
+            return inner
+        return TransformedParams(
+            inner=inner, extra=self._update_extra(params.extra, iteration))
+
+    # -- delegated contract --------------------------------------------------
+    def env_spec(self) -> EnvSpec:
+        return self.env.env_spec()
+
+    def reset(self, num_envs: int, params):
+        ip = self.inner_params(params)
+        _, state = self.env.reset(num_envs, ip)
+        return self.observe(state, params), state
+
+    def _forward(self, state, action, params):
+        return self.env._forward(state, action, self.inner_params(params))
+
+    def _backward(self, state, action, params):
+        return self.env._backward(state, action, self.inner_params(params))
+
+    def is_terminal(self, state, params):
+        return self.env.is_terminal(state, self.inner_params(params))
+
+    def is_initial(self, state, params):
+        return self.env.is_initial(state, self.inner_params(params))
+
+    def terminal_repr(self, state, params):
+        return self.env.terminal_repr(state, self.inner_params(params))
+
+    def reward_params(self, params):
+        return self.env.reward_params(self.inner_params(params))
+
+    def log_reward(self, state, params):
+        return self.env.log_reward(state, self.inner_params(params))
+
+    def true_log_rewards(self, params):
+        return self.env.true_log_rewards(self.inner_params(params))
+
+    def true_distribution(self, params):
+        return self.env.true_distribution(self.inner_params(params))
+
+    def _energy(self, state, params):
+        return self.env.energy(state, self.inner_params(params))
+
+    def observe(self, state, params):
+        return self.env.observe(state, self.inner_params(params))
+
+    def observe_last(self, state, params, last_action=None):
+        return self.env.observe_last(state, self.inner_params(params),
+                                     last_action)
+
+    def forward_mask(self, state, params):
+        return self.env.forward_mask(state, self.inner_params(params))
+
+    def backward_mask(self, state, params):
+        return self.env.backward_mask(state, self.inner_params(params))
+
+    def get_backward_action(self, state, action, next_state, params):
+        return self.env.get_backward_action(state, action, next_state,
+                                            self.inner_params(params))
+
+    def get_forward_action(self, state, bwd_action, prev_state, params):
+        return self.env.get_forward_action(state, bwd_action, prev_state,
+                                           self.inner_params(params))
+
+    def flat_terminal_index(self, state, params):
+        return self.env.flat_terminal_index(state, self.inner_params(params))
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.env!r})"
+
+
+class ObservationTransform(EnvTransform):
+    """Base for observation rewrites: subclass and override
+    :meth:`transform_obs`.  A non-identity rewrite disables the
+    incremental-obs protocol (cache appends are per-token and cannot
+    express a whole-observation map)."""
+
+    name = "observation"
+
+    def __init__(self, env: Environment):
+        super().__init__(env)
+        if type(self).transform_obs is not ObservationTransform.transform_obs:
+            self.supports_incremental_obs = False
+            self.incremental_pop_only = False
+
+    def transform_obs(self, obs: jax.Array) -> jax.Array:
+        return obs
+
+    def observe(self, state, params):
+        return self.transform_obs(
+            self.env.observe(state, self.inner_params(params)))
+
+
+class RewardExponent(EnvTransform):
+    """log R ↦ β · log R, i.e. R ↦ R^β (reward temperature 1/β).
+
+    β is a *param leaf* (``params.extra["beta"]``), constant by default or
+    linearly annealed from ``beta`` to ``final_beta`` over ``anneal_steps``
+    iterations through the :meth:`Environment.update_params` hook that every
+    sampler applies once per training batch.  Everything downstream of
+    ``log_reward`` — trajectory rewards, FLDB/MDB state scalars and
+    energies, the exact targets behind DP evaluators, EUBO probe rewards —
+    is scaled consistently because it all flows through the wrapper.
+
+    Evaluator caveat: in-scan :class:`~repro.evals.EvalSuite` evaluators
+    close over the env params at suite construction, so under a *scheduled*
+    β the metric rows are computed against the construction-time β while
+    training consumes the annealed one.
+    """
+
+    name = "reward_exponent"
+    wraps_params = True
+
+    def __init__(self, env: Environment, beta: float = 1.0,
+                 final_beta: Optional[float] = None,
+                 anneal_steps: int = 0):
+        super().__init__(env)
+        if (final_beta is None) != (anneal_steps == 0):
+            raise ValueError(
+                "scheduled beta needs both final_beta and anneal_steps "
+                f"(got final_beta={final_beta}, anneal_steps={anneal_steps})")
+        self.beta = float(beta)
+        self.final_beta = None if final_beta is None else float(final_beta)
+        self.anneal_steps = int(anneal_steps)
+
+    @property
+    def scheduled(self) -> bool:
+        return self.final_beta is not None
+
+    def _init_extra(self, key, inner_params):
+        return {"beta": jnp.float32(self.beta)}
+
+    def _update_extra(self, extra, iteration):
+        if not self.scheduled:
+            return extra
+        frac = jnp.clip(iteration.astype(jnp.float32) / self.anneal_steps,
+                        0.0, 1.0)
+        return {"beta": jnp.float32(self.beta)
+                + frac * jnp.float32(self.final_beta - self.beta)}
+
+    def log_reward(self, state, params):
+        return params.extra["beta"] * self.env.log_reward(state, params.inner)
+
+    def _energy(self, state, params):
+        # E = -log R at terminals, so the FLDB shaping scales with β too
+        return params.extra["beta"] * self.env.energy(state, params.inner)
+
+    def true_log_rewards(self, params):
+        return params.extra["beta"] * self.env.true_log_rewards(params.inner)
+
+    def true_distribution(self, params):
+        """Exact transformed target R^β / Z_β (softmax of the scaled
+        enumerated log-rewards)."""
+        return jax.nn.softmax(self.true_log_rewards(params))
+
+
+class RewardCache(EnvTransform):
+    """Memoize terminal rewards of an enumerable env into a flat table.
+
+    Built once at ``init`` from the wrapped env's ``true_log_rewards``
+    enumeration; ``log_reward`` becomes a single gather keyed on
+    ``flat_terminal_index``.  This trades O(num_states) up-front proxy-model
+    evaluations (one batched apply, host-side) for O(1) per-terminal lookups
+    on every rollout/replay/eval path — the win for proxy rewards (TFBind8's
+    binding table, QM9's gap MLP) whose per-batch evaluation dominates the
+    reward cost.
+
+    Requires the enumeration surface (``flat_terminal_index`` +
+    ``true_log_rewards``); refuses envs without it and scheduled-β stacks
+    (a memo of a moving reward would silently go stale).
+    """
+
+    name = "reward_cache"
+    wraps_params = True
+
+    def __init__(self, env: Environment, max_states: int = 1 << 22):
+        super().__init__(env)
+        # EnvTransform defines delegating flat_terminal_index/
+        # true_log_rewards methods, so capability lives on the bare env
+        if not hasattr(base_env(env), "flat_terminal_index"):
+            raise TypeError(
+                f"RewardCache needs the enumeration surface "
+                f"(flat_terminal_index / true_log_rewards); "
+                f"{type(env).__name__} does not provide it")
+        if has_scheduled_reward(env):
+            raise TypeError(
+                "RewardCache cannot memoize a scheduled reward (stack the "
+                "cache *inside* the scheduled RewardExponent instead)")
+        self.max_states = int(max_states)
+
+    def _init_extra(self, key, inner_params):
+        table = self.env.true_log_rewards(inner_params)
+        if table.shape[0] > self.max_states:
+            raise ValueError(
+                f"{type(self.env).__name__} enumerates {table.shape[0]} "
+                f"terminal states > max_states={self.max_states}")
+        return {"table": jnp.asarray(table, jnp.float32)}
+
+    def log_reward(self, state, params):
+        table = params.extra["table"]
+        idx = self.env.flat_terminal_index(state, params.inner)
+        return table[jnp.clip(idx, 0, table.shape[0] - 1)]
+
+    def true_log_rewards(self, params):
+        return params.extra["table"]
+
+    def true_distribution(self, params):
+        return jax.nn.softmax(params.extra["table"])
+
+
+class TimeLimit(EnvTransform):
+    """Cap trajectories at ``limit`` forward steps.
+
+    A limit at or above the env's natural horizon only shortens the rollout
+    scan (``max_steps``).  Below it, states about to exhaust the budget have
+    every action but stop masked, so episodes still end on a genuine
+    terminal — this needs a ``stop_action`` that is guaranteed legal at the
+    forced step (hypergrid, variable-length sequences with
+    ``min_len < limit``, DAG); fixed-fill envs (bitseq, ising, fixed-length
+    sequences) cannot be truncated below their horizon.  Two truncation
+    caveats: (1) backward masks are not narrowed, so P_B may propose
+    reconstructions the truncated P_F cannot produce (their log P_F is the
+    finite ILLEGAL_LOGPROB floor); (2) exact targets
+    (``true_distribution`` / ``true_log_rewards``) still enumerate the
+    *untruncated* terminal set, so TV/JSD against them carries a permanent
+    floor equal to the target mass on terminals the truncated policy cannot
+    reach — treat those curves as upper bounds under a TimeLimit.
+    """
+
+    name = "time_limit"
+
+    def __init__(self, env: Environment, limit: int):
+        super().__init__(env)
+        limit = int(limit)
+        if limit < 1:
+            raise ValueError(f"limit must be >= 1, got {limit}")
+        if limit < env.max_steps:
+            if getattr(env, "stop_action", None) is None:
+                raise TypeError(
+                    f"TimeLimit({limit}) below "
+                    f"{type(env).__name__}.max_steps={env.max_steps} needs "
+                    "a stop action to force termination")
+            # stop must also be *legal* when forced: variable-length envs
+            # gate it on a minimum length, and a forced all-illegal mask
+            # would silently sample ILLEGAL_LOGPROB transitions into
+            # training batches
+            min_len = int(getattr(env, "min_len", 0))
+            if limit - 1 < min_len:
+                raise ValueError(
+                    f"TimeLimit({limit}) forces stop after {limit - 1} "
+                    f"content steps, but {type(env).__name__} only allows "
+                    f"stop from length >= {min_len}")
+        self.limit = limit
+        self.max_steps = min(env.max_steps, limit)
+
+    def forward_mask(self, state, params):
+        mask = self.env.forward_mask(state, self.inner_params(params))
+        if self.limit >= self.env.max_steps:
+            return mask
+        force = state.steps >= self.limit - 1
+        only_stop = jnp.arange(mask.shape[-1]) == self.env.stop_action
+        return jnp.where(force[:, None],
+                         jnp.logical_and(mask, only_stop[None]), mask)
+
+
+# ---------------------------------------------------------------------------
+# Registry + CLI spec parsing
+# ---------------------------------------------------------------------------
+
+#: name -> transform class, mirroring the recipe registry idiom
+TRANSFORMS: Dict[str, type] = {
+    cls.name: cls
+    for cls in (EnvTransform, ObservationTransform, RewardExponent,
+                RewardCache, TimeLimit)
+}
+
+TransformSpec = Union[str, Callable[[Environment], Environment]]
+
+
+def parse_transform(spec: str) -> Tuple[str, Dict[str, Any]]:
+    """``"name[:k=v,k=v]"`` -> ``(name, kwargs)``.
+
+    ``"beta=2.0"`` (bare key=value with a RewardExponent kwarg) is sugar for
+    ``"reward_exponent:beta=2.0"`` — the common case on the CLI.
+    """
+    spec = spec.strip()
+    if ":" in spec:
+        name, _, argstr = spec.partition(":")
+    elif "=" in spec:
+        name, argstr = "reward_exponent", spec
+    else:
+        name, argstr = spec, ""
+    name = name.strip()
+    if name not in TRANSFORMS:
+        raise KeyError(f"unknown transform {name!r}; "
+                       f"available: {sorted(TRANSFORMS)}")
+    kwargs: Dict[str, Any] = {}
+    for pair in filter(None, (p.strip() for p in argstr.split(","))):
+        if "=" not in pair:
+            raise ValueError(f"expected key=value in transform spec, "
+                             f"got {pair!r} (full spec: {spec!r})")
+        k, v = pair.split("=", 1)
+        try:
+            kwargs[k.strip()] = ast.literal_eval(v.strip())
+        except (ValueError, SyntaxError):
+            kwargs[k.strip()] = v.strip()
+    return name, kwargs
+
+
+def apply_transforms(env: Environment,
+                     specs: Sequence[TransformSpec]) -> Environment:
+    """Wrap ``env`` in a transform stack, first spec innermost.
+
+    Each spec is a string for :func:`parse_transform` or a callable
+    ``env -> env`` (e.g. ``lambda e: RewardExponent(e, beta=2.0)``).
+    """
+    for spec in specs:
+        if callable(spec):
+            env = spec(env)
+        else:
+            name, kwargs = parse_transform(spec)
+            env = TRANSFORMS[name](env, **kwargs)
+    return env
+
+
+def base_env(env: Environment) -> Environment:
+    """The innermost (bare) environment of a transform stack."""
+    while isinstance(env, EnvTransform):
+        env = env.env
+    return env
+
+
+def transform_stack(env: Environment) -> Tuple[str, ...]:
+    """Outermost-first transform names wrapping ``env`` (for logging)."""
+    names = []
+    while isinstance(env, EnvTransform):
+        names.append(env.name)
+        env = env.env
+    return tuple(names)
+
+
+def has_scheduled_reward(env: Environment) -> bool:
+    """True when any layer of the stack anneals its reward over training."""
+    while isinstance(env, EnvTransform):
+        if getattr(env, "scheduled", False):
+            return True
+        env = env.env
+    return False

@@ -137,14 +137,23 @@ def make_bitseq_dp(env, env_params, policy_apply) -> Callable:
 
 
 def make_exact_dp(env, env_params, policy_apply) -> Callable:
-    """Dispatch to the DP builder matching the environment type."""
+    """Dispatch to the DP builder matching the environment type.
+
+    Transformed envs dispatch on their *base* environment (the DAG
+    structure is the bare env's) while the DP itself consumes the outer
+    env's ``observe``/``forward_mask`` — so observation transforms are
+    honored and the learned distribution is comparable against the outer
+    env's (e.g. R^β) target.
+    """
     from ..envs.bitseq import BitSeqEnvironment
     from ..envs.hypergrid import HypergridEnvironment
-    if isinstance(env, HypergridEnvironment):
+    from ..envs.transforms import base_env
+    bare = base_env(env)
+    if isinstance(bare, HypergridEnvironment):
         return make_hypergrid_dp(env, env_params, policy_apply)
-    if isinstance(env, BitSeqEnvironment):
+    if isinstance(bare, BitSeqEnvironment):
         return make_bitseq_dp(env, env_params, policy_apply)
-    raise TypeError(f"no exact-DP evaluator for {type(env).__name__}; "
+    raise TypeError(f"no exact-DP evaluator for {type(bare).__name__}; "
                     "enumerable envs: Hypergrid, BitSeq")
 
 

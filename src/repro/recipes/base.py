@@ -27,7 +27,7 @@ override surface.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 RECIPES: Dict[str, "Recipe"] = {}
 
@@ -45,6 +45,13 @@ class RunOptions:
     ``devices`` caps the mesh size (default: all visible devices), and
     ``num_seeds`` sizes the seed axis of the seed plans.  ``num_envs`` is
     always the *global* batch — a data-parallel plan shards it.
+
+    ``transforms`` is the env-transform stack applied on top of the
+    recipe's (or ``--env``-selected) environment, innermost first — specs
+    as accepted by :func:`repro.envs.transforms.parse_transform`
+    (``"beta=2.0"``, ``"reward_cache"``, ``"time_limit:limit=10"``).
+    ``eval_every == 0`` disables both the compiled eval suite and the
+    legacy host eval (smoke/matrix runs).
     """
     seed: int = 0
     iterations: int = 20000
@@ -54,6 +61,7 @@ class RunOptions:
     plan: str = "single"
     devices: Optional[int] = None
     num_seeds: Optional[int] = None
+    transforms: Tuple[str, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)

@@ -23,6 +23,17 @@ def _run(opts, env_overrides, config_overrides, log):
     overrides = dict(env_overrides)
     num_data = overrides.pop("num_data", 2000)
     env = _make_env(**overrides)
+    if opts.transforms:
+        from ..envs.transforms import EnvTransform, apply_transforms
+        env = apply_transforms(env, opts.transforms)
+        layer = env
+        while isinstance(layer, EnvTransform):
+            if layer.wraps_params:
+                raise ValueError(
+                    f"transform {layer.name!r} adds a params layer, but "
+                    "EB-GFN owns the reward params (the learned J); only "
+                    "param-free transforms compose with ising_ebgfn")
+            layer = layer.env
     true_params = env.init(jax.random.PRNGKey(0))
     log("generating MCMC dataset (Wolff / heat-bath PT)...")
     data = jnp.asarray(generate_ising_dataset(
@@ -46,10 +57,12 @@ def _run(opts, env_overrides, config_overrides, log):
     rng = np.random.RandomState(opts.seed)
     history = []
     t0 = time.time()
+    do_eval = opts.eval_every > 0  # eval_every == 0 disables evaluation
     for it in range(opts.iterations):
         idx = rng.randint(0, data.shape[0], opts.num_envs)
         st, m = step_fn(st, data[idx])
-        if it % opts.eval_every == 0 or it == opts.iterations - 1:
+        if do_eval and (it % opts.eval_every == 0
+                        or it == opts.iterations - 1):
             score = float(neg_log_rmse(st.ebm_params["J"], true_params["J"]))
             row = {"it": it, "gfn_loss": float(m["gfn_loss"]),
                    "neg_log_rmse": score,

@@ -22,8 +22,10 @@ from .base import Recipe, register
 
 # -- Bit sequences (§B.2) ---------------------------------------------------
 
-def _bitseq_env(n: int = 120, k: int = 8, beta: float = 3.0):
-    return BitSeqEnvironment(n=n, k=k, beta=beta)
+def _bitseq_env(n: int = 120, k: int = 8, beta: float = 3.0, seed: int = 0):
+    # keep in signature-lockstep with envs/registry._bitseq (the mirror is
+    # asserted by test): both must follow the run seed the same way
+    return BitSeqEnvironment(n=n, k=k, beta=beta, seed=seed)
 
 
 def _bitseq_policy(env):
@@ -47,7 +49,9 @@ def _bitseq_config(env, opts):
 def _bitseq_probe(env, env_params, opts, test_size: int = 128):
     """Fixed probe of flip-test-set terminals (paper §B.2) as states +
     log-rewards — shared by the legacy host eval and the compiled
-    correlation evaluator so both score the same probe set."""
+    correlation evaluator so both score the same probe set.  Probe rewards
+    go through ``env.log_reward`` on terminal states so transform stacks
+    (reward exponents, caches) score the probe consistently."""
     modes = np.asarray(env_params.modes)
     test = make_test_set(opts.seed, modes)
     sel = np.random.RandomState(0).choice(len(test), test_size,
@@ -55,8 +59,8 @@ def _bitseq_probe(env, env_params, opts, test_size: int = 128):
     pw = 2 ** np.arange(env.k - 1, -1, -1)
     words = jnp.asarray(
         (test[sel].reshape(-1, env.L, env.k) * pw).sum(-1), jnp.int32)
-    return (env.terminal_state_from_words(words),
-            env.log_reward_of_words(words, env_params))
+    term = env.terminal_state_from_words(words)
+    return term, env.log_reward(term, env_params)
 
 
 def _bitseq_eval(env, env_params, policy, opts, test_size: int = 128,
@@ -100,8 +104,7 @@ register(Recipe(
 
 def _enumerable_eval(flatten_states, num_states, num_samples=4000):
     def make_eval(env, env_params, policy, opts):
-        true = jax.nn.softmax(
-            env.reward_module.true_log_rewards(env_params))
+        true = jax.nn.softmax(env.true_log_rewards(env_params))
 
         def eval_fn(key, params):
             b = forward_rollout(key, env, env_params, policy.apply, params,
@@ -126,8 +129,9 @@ def _enumerable_evals(num_states, num_modes: int = 128):
     empirical TV/JSD + mode coverage vs the proxy-reward target, reward
     correlation over a uniform probe, and the forward log-Z estimates."""
     def make_evals(env, env_params, policy, opts):
-        true = jax.nn.softmax(
-            env.reward_module.true_log_rewards(env_params))
+        # env-level surface (not reward_module directly) so transform
+        # stacks shape the target consistently with trajectory rewards
+        true = jax.nn.softmax(env.true_log_rewards(env_params))
         modes = jnp.argsort(-true)[:num_modes]
         probe, probe_log_r = uniform_probe_states(
             jax.random.PRNGKey(opts.seed + 23), env, env_params, 128)

@@ -12,12 +12,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..envs.base import EnvSpec, RewardModule, SeqTerminal
 from ..nn.core import dense_apply, dense_init, embedding_apply, embedding_init
 from ..nn.transformer import (encoder_apply, encoder_init,
                               positional_embedding_init)
 
 
-class AMPRewardModule:
+class AMPRewardModule(RewardModule):
     def __init__(self, max_len: int = 60, vocab: int = 20,
                  r_min: float = 1e-4, seed: int = 0, dim: int = 64,
                  num_layers: int = 3, num_heads: int = 8):
@@ -30,8 +31,10 @@ class AMPRewardModule:
         self.num_layers = num_layers
         self.num_heads = num_heads
 
-    def init(self, key: jax.Array) -> dict:
+    def init(self, key: jax.Array, env_spec: EnvSpec) -> dict:
         del key
+        assert env_spec.length == self.max_len \
+            and env_spec.vocab == self.vocab, env_spec
         k = jax.random.PRNGKey(self.seed)
         ks = jax.random.split(k, 4)
         return {
@@ -54,7 +57,7 @@ class AMPRewardModule:
             / jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1)
         return dense_apply(params["head"], pooled)[..., 0]
 
-    def log_reward(self, tokens: jax.Array, length: jax.Array,
-                   params: dict) -> jax.Array:
-        p = jax.nn.sigmoid(self.classifier_logit(tokens, length, params))
+    def log_reward(self, terminal: SeqTerminal, params: dict) -> jax.Array:
+        p = jax.nn.sigmoid(self.classifier_logit(terminal.tokens,
+                                                 terminal.length, params))
         return jnp.log(jnp.maximum(p, params["r_min"]))

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..envs.base import EnvSpec, RewardModule
+
 _LGAMMA = np.vectorize(math.lgamma)
 
 
@@ -232,8 +234,13 @@ def markov_blanket_marginals(dags: np.ndarray, post: np.ndarray) -> np.ndarray:
     return np.einsum('n,nij->ij', post, mb)
 
 
-class BayesNetRewardModule:
-    """Bundles dataset + score table as the environment's reward params."""
+class BayesNetRewardModule(RewardModule):
+    """Bundles dataset + score table as the environment's reward params.
+
+    Terminal representation: the per-node parent-set bitmask ``pa_mask``
+    (B, d) int32 — log R(G) = sum_j LocalScore(j | Pa(j)) is a (d-term)
+    table lookup (Eq. 12).
+    """
 
     def __init__(self, d: int = 5, num_samples: int = 100,
                  score: str = "bge", seed: int = 0,
@@ -245,8 +252,9 @@ class BayesNetRewardModule:
         self.expected_in_degree = expected_in_degree
         self.noise_var = noise_var
 
-    def init(self, key: jax.Array) -> dict:
+    def init(self, key: jax.Array, env_spec: EnvSpec) -> dict:
         del key
+        assert env_spec.num_nodes == self.d, env_spec
         rng = np.random.RandomState(self.seed)
         adj = sample_erdos_renyi_dag(rng, self.d, self.expected_in_degree)
         X = sample_linear_gaussian_data(rng, adj, self.num_samples,
@@ -263,3 +271,10 @@ class BayesNetRewardModule:
             "true_adj": jnp.asarray(adj, jnp.int8),
             "data": jnp.asarray(X, jnp.float32),
         }
+
+    def log_reward(self, pa_mask: jax.Array, params: dict) -> jax.Array:
+        """Direct (non-incremental) modular score from parent bitmasks:
+        the protocol surface; the DAG environment's hot path keeps the O(1)
+        delta-score updates (Eq. 13) and agrees with this by construction."""
+        node = jnp.arange(pa_mask.shape[-1])[None, :]
+        return jnp.sum(params["table"][node, pa_mask], axis=-1)

@@ -1,0 +1,106 @@
+"""Bit-sequence reward (paper §3.2 / §B.2): minimum-Hamming-distance modes.
+
+R(x) = exp(-beta * min_{x' in M} d(x, x') / n) with Hamming distance d and a
+fixed mode set M of |M|=60 strings built by concatenating n/8 random choices
+from H = {00000000, 11111111, 11110000, 00001111, 00111100}.
+
+Extracted from the environment's previously-inlined reward so that β is a
+reward-module knob (rescalable by the ``RewardExponent`` transform, no longer
+frozen into ``EnvParams``) and the mode machinery is reusable.  The terminal
+representation is the (B, L) int32 word sequence; distances are computed per
+k-bit word via popcount, bitwise-identical to the old inlined path (see
+``tests/test_transforms.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..envs.base import EnvSpec, RewardModule
+
+_H_PATTERNS = np.array([
+    [0, 0, 0, 0, 0, 0, 0, 0],
+    [1, 1, 1, 1, 1, 1, 1, 1],
+    [1, 1, 1, 1, 0, 0, 0, 0],
+    [0, 0, 0, 0, 1, 1, 1, 1],
+    [0, 0, 1, 1, 1, 1, 0, 0],
+], dtype=np.int32)
+
+
+def make_mode_set(seed: int, n: int, num_modes: int = 60) -> np.ndarray:
+    """Mode set M per the paper: concatenate n/8 patterns from H."""
+    rng = np.random.RandomState(seed)
+    chunks = n // 8
+    modes = np.zeros((num_modes, n), np.int32)
+    for i in range(num_modes):
+        picks = rng.randint(0, len(_H_PATTERNS), size=chunks)
+        modes[i] = _H_PATTERNS[picks].reshape(-1)
+    return modes
+
+
+def make_test_set(seed: int, modes: np.ndarray) -> np.ndarray:
+    """Test set: for every mode and every 0 <= i < n, flip i random bits."""
+    rng = np.random.RandomState(seed + 1)
+    num_modes, n = modes.shape
+    out = np.zeros((num_modes * n, n), np.int32)
+    row = 0
+    for mi in range(num_modes):
+        for i in range(n):
+            x = modes[mi].copy()
+            flip = rng.choice(n, size=i, replace=False)
+            x[flip] = 1 - x[flip]
+            out[row] = x
+            row += 1
+    return out
+
+
+def popcount(x: jax.Array, bits: int) -> jax.Array:
+    c = jnp.zeros_like(x)
+    for i in range(bits):
+        c = c + ((x >> i) & 1)
+    return c
+
+
+class BitSeqRewardModule(RewardModule):
+    """log R(x) = -beta * min Hamming(x, M) / n over word sequences.
+
+    ``word_bits``/``length`` (k / L, giving n = k·L) may be fixed at
+    construction — the environment passes its own — or left None and read
+    from the :class:`EnvSpec` at ``init``.
+    """
+
+    def __init__(self, beta: float = 3.0, num_modes: int = 60,
+                 seed: int = 0, word_bits: int | None = None,
+                 length: int | None = None):
+        self.beta = beta
+        self.num_modes = num_modes
+        self.seed = seed
+        self.k = None if word_bits is None else int(word_bits)
+        self.n = (None if word_bits is None or length is None
+                  else int(word_bits) * int(length))
+
+    def init(self, key: jax.Array, env_spec: EnvSpec) -> dict:
+        del key  # the mode set is a fixed asset keyed on self.seed
+        k = int(env_spec.word_bits)
+        n = int(env_spec.length) * k
+        assert self.k in (None, k) and self.n in (None, n), \
+            (self.k, self.n, env_spec)
+        self.k, self.n = k, n
+        assert self.n % 8 == 0, \
+            "mode set is built from 8-bit patterns (paper H)"
+        modes = make_mode_set(self.seed, self.n, self.num_modes)
+        # word id per k-bit block, MSB-first
+        pw = 2 ** np.arange(self.k - 1, -1, -1)
+        L = self.n // self.k
+        mode_words = (modes.reshape(-1, L, self.k) * pw).sum(-1)
+        return {"modes": jnp.asarray(modes),
+                "mode_words": jnp.asarray(mode_words, jnp.int32),
+                "beta": jnp.float32(self.beta)}
+
+    def log_reward(self, words: jax.Array, params: dict) -> jax.Array:
+        """-beta * min Hamming(x, M) / n via per-word popcount."""
+        xor = jnp.bitwise_xor(words[:, None, :], params["mode_words"][None])
+        ham = popcount(xor, self.k).sum(-1)              # (B, |M|)
+        dmin = jnp.min(ham, axis=-1).astype(jnp.float32)
+        return -params["beta"] * dmin / self.n

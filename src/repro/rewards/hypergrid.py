@@ -6,26 +6,35 @@ R(s) = R0 + R1 * prod_i I[0.25 < |s_i/(H-1) - 0.5|]
 with the standard parameters (R0, R1, R2) = (1e-3, 0.5, 2.0) from
 Bengio et al. 2021.  ``EasyHypergridRewardModule`` uses a flatter R0=1e-1
 variant commonly used for smoke examples (paper Listing 1 uses it).
+
+Implements the uniform :class:`repro.envs.base.RewardModule` protocol:
+``init(key, env_spec)`` captures the grid side (into the params pytree, so
+any identically-configured module instance can score them),
+``log_reward(pos, params)`` scores (B, d) grid coordinates.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from ..envs.base import EnvSpec, RewardModule
 
-class HypergridRewardModule:
+
+class HypergridRewardModule(RewardModule):
     def __init__(self, r0: float = 1e-3, r1: float = 0.5, r2: float = 2.0):
         self.r0, self.r1, self.r2 = r0, r1, r2
 
-    def init(self, key: jax.Array, dim: int, side: int) -> dict:
+    def init(self, key: jax.Array, env_spec: EnvSpec) -> dict:
         return {"r0": jnp.float32(self.r0), "r1": jnp.float32(self.r1),
-                "r2": jnp.float32(self.r2)}
+                "r2": jnp.float32(self.r2),
+                "side": jnp.float32(env_spec.side)}
 
-    def log_reward(self, pos: jax.Array, rp: dict, side: int) -> jax.Array:
-        x = jnp.abs(pos.astype(jnp.float32) / (side - 1) - 0.5)
+    def log_reward(self, pos: jax.Array, params: dict) -> jax.Array:
+        x = jnp.abs(pos.astype(jnp.float32) / (params["side"] - 1) - 0.5)
         t1 = jnp.all(x > 0.25, axis=-1).astype(jnp.float32)
         t2 = jnp.all(jnp.logical_and(x > 0.3, x < 0.4), axis=-1)
-        r = rp["r0"] + rp["r1"] * t1 + rp["r2"] * t2.astype(jnp.float32)
+        r = params["r0"] + params["r1"] * t1 \
+            + params["r2"] * t2.astype(jnp.float32)
         return jnp.log(r)
 
 

@@ -13,10 +13,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..envs.base import EnvSpec, RewardModule, SeqTerminal
 from ..nn.core import mlp_apply, mlp_init
 
 
-class QM9RewardModule:
+class QM9RewardModule(RewardModule):
     def __init__(self, beta: float = 10.0, seed: int = 0, length: int = 5,
                  vocab: int = 11):
         self.beta = beta
@@ -24,8 +25,10 @@ class QM9RewardModule:
         self.length = length
         self.vocab = vocab
 
-    def init(self, key: jax.Array) -> dict:
+    def init(self, key: jax.Array, env_spec: EnvSpec) -> dict:
         del key  # proxy weights are a fixed asset, not per-run randomness
+        assert env_spec.length == self.length \
+            and env_spec.vocab == self.vocab, env_spec
         k = jax.random.PRNGKey(self.seed)
         proxy = mlp_init(k, self.length * self.vocab, [64, 64], 1)
         return {"proxy": proxy, "beta": jnp.float32(self.beta)}
@@ -36,9 +39,9 @@ class QM9RewardModule:
         out = mlp_apply(params["proxy"], x, activation=jax.nn.tanh)[..., 0]
         return 0.05 + 0.95 * jax.nn.sigmoid(2.0 * out)   # (0.05, 1.0)
 
-    def log_reward(self, tokens: jax.Array, length: jax.Array,
-                   params: dict) -> jax.Array:
-        return params["beta"] * jnp.log(self.proxy_score(tokens, params))
+    def log_reward(self, terminal: SeqTerminal, params: dict) -> jax.Array:
+        return params["beta"] * jnp.log(
+            self.proxy_score(terminal.tokens, params))
 
     def true_log_rewards(self, params: dict) -> jax.Array:
         """log R over all 11^5 = 161051 sequences (flat base-11 order)."""

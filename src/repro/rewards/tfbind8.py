@@ -14,6 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..envs.base import (EnvSpec, RewardModule, SeqTerminal,
+                         flat_index_of_tokens)
+
 
 def synth_binding_table(seed: int = 0, length: int = 8, vocab: int = 4,
                         num_motifs: int = 12) -> np.ndarray:
@@ -34,21 +37,19 @@ def synth_binding_table(seed: int = 0, length: int = 8, vocab: int = 4,
     return 0.001 + 0.999 * score             # in (0, 1]
 
 
-class TFBind8RewardModule:
+class TFBind8RewardModule(RewardModule):
     def __init__(self, beta: float = 10.0, seed: int = 0):
         self.beta = beta
         self.seed = seed
 
-    def init(self, key: jax.Array) -> dict:
+    def init(self, key: jax.Array, env_spec: EnvSpec) -> dict:
+        assert env_spec.length == 8 and env_spec.vocab == 4, env_spec
         table = synth_binding_table(self.seed)
         return {"table": jnp.asarray(table, jnp.float32),
                 "beta": jnp.float32(self.beta)}
 
-    def log_reward(self, tokens: jax.Array, length: jax.Array,
-                   params: dict) -> jax.Array:
-        idx = jnp.zeros(tokens.shape[:-1], jnp.int32)
-        for i in range(8):
-            idx = idx * 4 + jnp.clip(tokens[..., i], 0, 3)
+    def log_reward(self, terminal: SeqTerminal, params: dict) -> jax.Array:
+        idx = flat_index_of_tokens(jnp.clip(terminal.tokens, 0, 3), 4, 8)
         return params["beta"] * jnp.log(params["table"][idx])
 
     def true_log_rewards(self, params: dict) -> jax.Array:

@@ -8,11 +8,17 @@ script is now a thin wrapper over this entry point.
 Examples::
 
     python -m repro.run --list
+    python -m repro.run --list-envs
     python -m repro.run --recipe hypergrid_tb --iterations 50
     python -m repro.run --recipe hypergrid_tb --sampler replay \
         --replay-capacity 4096 --prioritized
     python -m repro.run --recipe hypergrid_tb --set dim=2 --set side=8 \
         --cfg lr=3e-4
+
+    # registered env x transform stack x objective (env registry)
+    python -m repro.run --env hypergrid --transform beta=2.0
+    python -m repro.run --env tfbind8 --transform reward_cache \
+        --transform "reward_exponent:beta=0.5" --iterations 200
 
     # data-parallel over a device mesh (on CPU: virtual devices)
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -38,6 +44,8 @@ import numpy as np
 from . import recipes
 from .algo import TrainLoop, make_plan, make_sampler
 from .checkpoint.manager import CheckpointManager
+from .envs.registry import env_names, get_env
+from .envs.transforms import apply_transforms, transform_stack
 from .evals import EvalSuite
 from .recipes.base import RunOptions
 
@@ -69,7 +77,9 @@ def dump_metrics_json(path: str, *, recipe: str, opts: RunOptions,
     return doc
 
 
-def run_recipe(name: str, *, seed: int = 0,
+def run_recipe(name: Optional[str] = None, *, seed: int = 0,
+               env_name: Optional[str] = None,
+               transforms=(),
                iterations: Optional[int] = None,
                num_envs: Optional[int] = None,
                eval_every: Optional[int] = None,
@@ -85,12 +95,19 @@ def run_recipe(name: str, *, seed: int = 0,
     """Run a registered recipe; returns ``{recipe, state, history,
     metrics}``.
 
-    ``env`` overrides are forwarded to the recipe's ``make_env``; ``config``
-    overrides are applied with ``GFNConfig._replace``; ``sampler`` is a
-    registry name or a :class:`repro.algo.Sampler` instance.  When the
-    recipe declares compiled evaluators (``make_evals``), they run in-scan
-    every ``eval_every`` iterations on ``eval_batch``-sized probes and land
-    in ``out["metrics"]`` (and in the ``metrics_json`` file when given).
+    ``env_name`` selects an environment from :mod:`repro.envs.registry`; its
+    factory replaces the recipe's ``make_env`` and, when ``name`` is None,
+    its default recipe supplies the policy/objective bundle.  ``transforms``
+    is a stack of :mod:`repro.envs.transforms` specs (strings or
+    ``env -> env`` callables, innermost first) wrapped around the env before
+    ``init`` — rollouts, objectives, and evaluators all consume the
+    transformed env.  ``env`` overrides are forwarded to the env factory;
+    ``config`` overrides are applied with ``GFNConfig._replace``;
+    ``sampler`` is a registry name or a :class:`repro.algo.Sampler`
+    instance.  When the recipe declares compiled evaluators
+    (``make_evals``), they run in-scan every ``eval_every`` iterations on
+    ``eval_batch``-sized probes and land in ``out["metrics"]`` (and in the
+    ``metrics_json`` file when given); ``eval_every=0`` disables all evals.
 
     ``plan``/``devices``/``num_seeds`` pick the execution plan (see
     :class:`repro.recipes.base.RunOptions`).  ``checkpoint_every > 0``
@@ -98,6 +115,14 @@ def run_recipe(name: str, *, seed: int = 0,
     ``checkpoints/<recipe>``) on that cadence plus once at the end;
     ``restore=True`` resumes from the newest complete checkpoint there.
     """
+    entry = None
+    if env_name is not None:
+        entry = get_env(env_name)
+        if name is None:
+            name = entry.recipe
+    if name is None:
+        raise ValueError("run_recipe needs a recipe name or an env_name "
+                         "whose registry entry supplies one")
     recipe = recipes.get(name)
     opts = RunOptions(
         seed=seed,
@@ -108,11 +133,20 @@ def run_recipe(name: str, *, seed: int = 0,
         else recipe.eval_every,
         eval_batch=eval_batch if eval_batch is not None
         else RunOptions.eval_batch,
-        plan=plan, devices=devices, num_seeds=num_seeds)
+        plan=plan, devices=devices, num_seeds=num_seeds,
+        transforms=tuple(transforms))
     exec_plan = make_plan(plan, devices=devices, num_seeds=num_seeds,
                           num_envs=opts.num_envs)
 
     if recipe.run_override is not None:
+        if entry is not None and entry.recipe != recipe.name:
+            # the override builds its own environment, so a foreign --env
+            # would be silently ignored — refuse instead
+            raise ValueError(
+                f"recipe {recipe.name!r} uses a custom training driver "
+                f"that constructs its own environment; --env "
+                f"{env_name!r} cannot replace it (drop --recipe to use "
+                f"that env's default recipe {entry.recipe!r})")
         if sampler is not None:
             raise ValueError(
                 f"recipe {recipe.name!r} uses a custom training driver; "
@@ -128,12 +162,17 @@ def run_recipe(name: str, *, seed: int = 0,
         return recipe.run_override(opts, env or {}, config or {}, log)
 
     env_kwargs = dict(env or {})
+    make_env_fn = entry.make if entry is not None else recipe.make_env
     # recipes whose env construction is seeded (dataset / reward generation)
     # follow the run seed unless the caller overrides it explicitly
     if "seed" not in env_kwargs and \
-            "seed" in inspect.signature(recipe.make_env).parameters:
+            "seed" in inspect.signature(make_env_fn).parameters:
         env_kwargs["seed"] = opts.seed
-    environment = recipe.make_env(**env_kwargs)
+    environment = make_env_fn(**env_kwargs)
+    if opts.transforms:
+        environment = apply_transforms(environment, opts.transforms)
+        log(f"transforms: {' > '.join(transform_stack(environment))} "
+            f"(outermost first)")
     env_params = environment.init(jax.random.PRNGKey(opts.seed))
     policy = recipe.make_policy(environment)
     cfg = recipe.make_config(environment, opts)
@@ -148,8 +187,10 @@ def run_recipe(name: str, *, seed: int = 0,
 
     suite = None
     # seed plans carry a per-seed metric axis the JSON row extractor does
-    # not flatten; keep compiled evals to the unseeded plans
-    if recipe.make_evals is not None and not exec_plan.seeds:
+    # not flatten; keep compiled evals to the unseeded plans.
+    # eval_every == 0 disables evaluation entirely (smoke/matrix runs).
+    if recipe.make_evals is not None and opts.eval_every > 0 \
+            and not exec_plan.seeds:
         suite = EvalSuite(
             recipe.make_evals(environment, env_params, policy, opts),
             every=opts.eval_every, seed=opts.seed)
@@ -169,7 +210,7 @@ def run_recipe(name: str, *, seed: int = 0,
     # seed plans skip it too (it expects unseeded params)
     eval_fn = (recipe.make_eval(environment, env_params, policy, opts)
                if recipe.make_eval and suite is None
-               and not exec_plan.seeds else None)
+               and opts.eval_every > 0 and not exec_plan.seeds else None)
 
     eval_key = jax.random.PRNGKey(opts.seed + 2)
     t0 = time.time()
@@ -192,7 +233,8 @@ def run_recipe(name: str, *, seed: int = 0,
     state, history = loop.run(jax.random.PRNGKey(opts.seed + 1),
                               opts.iterations, mode="python",
                               callback=callback,
-                              callback_every=opts.eval_every,
+                              callback_every=opts.eval_every
+                              or opts.iterations,
                               checkpoint=manager,
                               checkpoint_every=checkpoint_every,
                               restore=restore)
@@ -229,13 +271,27 @@ def main(argv=None) -> int:
         prog="python -m repro.run",
         description="Run a registered GFlowNet training recipe.")
     ap.add_argument("--recipe", help="recipe name (see --list)")
+    ap.add_argument("--env", dest="env_name", default=None, metavar="NAME",
+                    help="registered environment (see --list-envs); its "
+                         "factory replaces the recipe's make_env and, "
+                         "without --recipe, its default recipe drives the "
+                         "run")
+    ap.add_argument("--transform", action="append", metavar="SPEC",
+                    dest="transforms",
+                    help="env transform applied innermost-first; SPEC is "
+                         "name[:k=v,...] (reward_exponent | reward_cache | "
+                         "time_limit | identity) or the beta=2.0 shorthand "
+                         "for reward_exponent; repeatable to stack")
     ap.add_argument("--list", action="store_true",
                     help="list registered recipes and exit")
+    ap.add_argument("--list-envs", action="store_true",
+                    help="list registered environments and exit")
     ap.add_argument("--iterations", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--num-envs", type=int, default=None)
     ap.add_argument("--eval-every", type=int, default=None,
-                    help="iterations between in-scan evaluation rows")
+                    help="iterations between in-scan evaluation rows "
+                         "(0 disables evaluation)")
     ap.add_argument("--eval-batch", type=int, default=None,
                     help="sample count for sampling evaluators")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
@@ -281,18 +337,36 @@ def main(argv=None) -> int:
                     help="GFNConfig override (e.g. lr=3e-4)")
     args = ap.parse_args(argv)
 
-    if args.list or not args.recipe:
+    if args.list_envs:
+        width = max((len(n) for n in env_names()), default=0)
+        rwidth = max((len(get_env(n).recipe) for n in env_names()),
+                     default=0)
+        for n in env_names():
+            e = get_env(n)
+            print(f"{n:<{width}}  recipe={e.recipe:<{rwidth}}  "
+                  f"transforms={','.join(e.transforms)}  {e.description}")
+        return 0
+
+    if args.list or not (args.recipe or args.env_name):
         width = max((len(n) for n in recipes.names()), default=0)
         for n in recipes.names():
             print(f"{n:<{width}}  {recipes.get(n).description}")
         return 0
 
-    try:
-        recipes.get(args.recipe)
-    except KeyError:
-        print(f"error: unknown recipe {args.recipe!r}; run --list to see "
-              "the registry", file=sys.stderr)
-        return 2
+    if args.env_name is not None:
+        try:
+            get_env(args.env_name)
+        except KeyError:
+            print(f"error: unknown env {args.env_name!r}; run --list-envs "
+                  "to see the registry", file=sys.stderr)
+            return 2
+    if args.recipe is not None:
+        try:
+            recipes.get(args.recipe)
+        except KeyError:
+            print(f"error: unknown recipe {args.recipe!r}; run --list to "
+                  "see the registry", file=sys.stderr)
+            return 2
 
     sampler_kwargs = {}
     if args.sampler in ("replay", "backward_replay"):
@@ -301,7 +375,10 @@ def main(argv=None) -> int:
                           "prioritized": args.prioritized,
                           "temperature": args.temperature}
 
-    run_recipe(args.recipe, seed=args.seed, iterations=args.iterations,
+    run_recipe(args.recipe, seed=args.seed,
+               env_name=args.env_name,
+               transforms=tuple(args.transforms or ()),
+               iterations=args.iterations,
                num_envs=args.num_envs, eval_every=args.eval_every,
                eval_batch=args.eval_batch,
                sampler=args.sampler, sampler_kwargs=sampler_kwargs,

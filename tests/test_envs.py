@@ -66,7 +66,7 @@ class TestHypergrid:
         env, params = self.env, self.params
         # corner (4,4,4): |s/(H-1)-0.5| = 0.5 > 0.25 but not in (0.3,0.4)
         pos = jnp.array([[4, 4, 4]], jnp.int32)
-        lr = self.env.reward_module.log_reward(pos, params.reward_params, 5)
+        lr = self.env.reward_module.log_reward(pos, params.reward_params)
         np.testing.assert_allclose(float(lr[0]), np.log(1e-1 + 0.5),
                                    rtol=1e-5)
 

@@ -197,7 +197,7 @@ class TestRolloutProperties:
         assert bool(jnp.all(b.done[-1]))
         # each env's log-reward equals the reward of its final position
         pos = jnp.argmax(b.obs[-1].reshape(8, dim, side), -1)
-        lr = env.reward_module.log_reward(pos, params.reward_params, side)
+        lr = env.reward_module.log_reward(pos, params.reward_params)
         np.testing.assert_allclose(np.asarray(b.log_reward),
                                    np.asarray(lr), atol=1e-5)
 

@@ -38,7 +38,7 @@ class TestIdentities:
         idx = {s: i for i, s in enumerate(states)}
         pos = jnp.asarray(states, jnp.int32)
         log_r = np.asarray(env.reward_module.log_reward(
-            pos, params.reward_params, side))
+            pos, params.reward_params))
         # backward induction in reverse topological order (sum of coords)
         # F(s->sf) = R(s); F(s->s') = F(s') * P_B(s|s')
         flow = np.zeros(len(states))
