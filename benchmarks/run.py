@@ -16,8 +16,8 @@ def main() -> None:
                     help="paper-scale settings (hours); default quick mode")
     ap.add_argument("--only", default=None,
                     help="run a single suite: table1|rollout|mesh|envs|"
-                         "fig2|table2|fig3|fig4|fig5|fig6|fig7|table8|"
-                         "roofline|metrics")
+                         "serve|fig2|table2|fig3|fig4|fig5|fig6|fig7|"
+                         "table8|roofline|metrics")
     ap.add_argument("--no-perf-json", action="store_true",
                     help="skip merging rows into benchmarks/results/"
                          "perf.json")
@@ -27,13 +27,14 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import envs, quality, roofline, rollout, table1_throughput
+    from . import envs, quality, roofline, rollout, serve, table1_throughput
 
     suites = {
         "table1": lambda: table1_throughput.run(quick),
         "rollout": lambda: rollout.run(quick),
         "mesh": lambda: rollout.run_mesh(quick),
         "envs": lambda: envs.run(quick),
+        "serve": lambda: serve.run(quick),
         "fig2": lambda: quality.fig2_hypergrid_tv(quick),
         "table2": lambda: quality.table2_hypergrid_sizes(quick),
         "fig3": lambda: quality.fig3_bitseq_correlation(quick),

@@ -123,12 +123,8 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     # -- restore --------------------------------------------------------------
-    def restore(self, step: int, target_tree: Any,
-                shardings: Optional[Any] = None) -> Any:
-        """Restore into the structure of ``target_tree``; if ``shardings`` is
-        given (a matching tree of NamedSharding), every array is placed with
-        it — this is the elastic-rescale path: the stored global arrays are
-        resharded onto whatever mesh the restarted job built."""
+    def _load_arrays(self, step: int) -> Dict[str, np.ndarray]:
+        """All saved leaves of ``step`` keyed by flattened name."""
         d = self.dir / f"step_{step}"
         meta = json.loads((d / "MANIFEST.json").read_text())
         data: Dict[str, np.ndarray] = {}
@@ -141,6 +137,15 @@ class CheckpointManager:
                     if logical in _EXOTIC:
                         arr = arr.view(_EXOTIC[logical][0])
                     data[name] = arr
+        return data
+
+    def restore(self, step: int, target_tree: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """Restore into the structure of ``target_tree``; if ``shardings`` is
+        given (a matching tree of NamedSharding), every array is placed with
+        it — this is the elastic-rescale path: the stored global arrays are
+        resharded onto whatever mesh the restarted job built."""
+        data = self._load_arrays(step)
         named, treedef = _flatten(target_tree)
         shard_named = None
         if shardings is not None:
@@ -169,3 +174,34 @@ class CheckpointManager:
         if step is None:
             return None, target_tree
         return step, self.restore(step, target_tree, shardings)
+
+    #: flattened-name prefix of the policy params inside a full training
+    #: checkpoint (LoopState.train.params; dataclass fields flatten with a
+    #: leading dot — see ``_flatten``)
+    POLICY_PARAMS_PREFIX = ".train/.params"
+
+    def restore_subtree(self, step: int, target_tree: Any,
+                        prefix: str = POLICY_PARAMS_PREFIX) -> Any:
+        """Restore only the leaves under ``prefix`` of a saved checkpoint
+        into the structure of ``target_tree``.
+
+        This is the serving loader: a :class:`repro.serve` engine needs the
+        policy params out of a full training checkpoint without
+        reconstructing (or even knowing the shapes of) the optimizer,
+        sampler, and metrics state that :meth:`restore` would insist on.
+        ``target_tree`` is a freshly-initialized policy params pytree;
+        leaf names are resolved as ``{prefix}/{leaf_name}``.
+        """
+        data = self._load_arrays(step)
+        named, treedef = _flatten(target_tree)
+        leaves = []
+        for name, _ in named:
+            full = f"{prefix}/{name}" if name else prefix
+            if full not in data:
+                have = sorted(k for k in data if k.startswith(prefix))
+                raise ValueError(
+                    f"checkpoint step_{step} in {self.dir} has no entry for "
+                    f"{full!r}; the policy it was trained with does not "
+                    f"match this one (saved under {prefix!r}: {have})")
+            leaves.append(jnp.asarray(data[full]))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -172,9 +172,11 @@ def make_transformer_policy(vocab_size: int, max_len: int, action_dim: int,
 
     def apply_cached(params, cache, token, pos, length, step=None):
         x_new = _embed(params, token.astype(jnp.int32), pos)
-        # token added at scan step t-1 lives in slot t (uniform across the
-        # batch; see nn.transformer.cache_append).  step=None falls back to
-        # the max per-env length, correct when all envs fill in lockstep.
+        # token added at scan step t-1 lives in slot t — a batch-uniform
+        # scalar for lockstep rollouts, or a (B,) per-row vector for the
+        # serving engine's lanes (see nn.transformer.cache_append).
+        # step=None falls back to the max per-env length, correct when all
+        # envs fill in lockstep.
         slot = jnp.max(length) if step is None else step
         slot = jnp.clip(slot, 1, max_len)
         y, cache = encoder_apply_cached(params["decoder"], x_new, cache,

@@ -59,7 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from ..envs.base import Environment
-from .types import (masked_logprobs, pytree_dataclass,
+from .types import (derive_env_keys, masked_logprobs, pytree_dataclass,
                     sample_masked_per_env)
 
 PolicyApply = Callable[[Any, jax.Array], Dict[str, jax.Array]]
@@ -177,7 +177,7 @@ def forward_rollout(key: jax.Array, env: Environment, env_params,
     obs0, state0 = env.reset(num_envs, env_params)
 
     def step_fn(carry, xs):
-        key_t, t = xs
+        env_keys_t, t = xs
         state, cache, prev_action = carry
         obs = env.observe(state, env_params)
         fmask = env.forward_mask(state, env_params)
@@ -193,10 +193,10 @@ def forward_rollout(key: jax.Array, env: Environment, env_params,
         # terminal no-op environments keep a legal dummy action (argmax mask)
         safe_mask = jnp.where(was_done[:, None],
                               jnp.ones_like(fmask), fmask)
-        actions, log_pf = sample_masked_per_env(key_t, out["logits"],
+        actions, log_pf = sample_masked_per_env(None, out["logits"],
                                                 safe_mask,
                                                 eps=exploration_eps,
-                                                env_ids=env_ids)
+                                                env_keys=env_keys_t)
         _, nstate, log_r, done, _ = env.step(state, actions, env_params)
         bwd_actions = env.get_backward_action(state, actions, nstate,
                                               env_params)
@@ -210,10 +210,12 @@ def forward_rollout(key: jax.Array, env: Environment, env_params,
 
     cache0 = policy.cache_init(policy_params, num_envs) if cached else ()
     prev0 = jnp.zeros((num_envs,), jnp.int32)
-    keys = jax.random.split(key, T)
+    # the whole (T, B) fold_in grid is derived in one vectorized op before
+    # the scan — same key stream as folding per step (derive_env_keys)
+    env_keys = derive_env_keys(jax.random.split(key, T), env_ids)
     (final_state, _, _), ys = jax.lax.scan(
         step_fn, (state0, cache0, prev0),
-        (keys, jnp.arange(T, dtype=jnp.int32)))
+        (env_keys, jnp.arange(T, dtype=jnp.int32)))
 
     obs_f = env.observe(final_state, env_params)
     fmask_f = env.forward_mask(final_state, env_params)
@@ -308,7 +310,7 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
             return policy.query_cached(policy_params, term_cache, length)
         return apply_fn(policy_params, env.observe(state, env_params))
 
-    def step_fn(carry, key_t):
+    def step_fn(carry, env_keys_t):
         state, acc_pf, acc_pb = carry
         at_init = env.is_initial(state, env_params)
         obs = env.observe(state, env_params)
@@ -321,8 +323,8 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
             if logits_b is None:
                 logits_b = jnp.zeros_like(bmask, jnp.float32)
         safe_bmask = jnp.where(at_init[:, None], jnp.ones_like(bmask), bmask)
-        bwd_a, log_pb = sample_masked_per_env(key_t, logits_b, safe_bmask,
-                                              env_ids=env_ids)
+        bwd_a, log_pb = sample_masked_per_env(None, logits_b, safe_bmask,
+                                              env_keys=env_keys_t)
         _, prev_state, _, _, _ = env.backward_step(state, bwd_a, env_params)
         fwd_a = env.get_forward_action(state, bwd_a, prev_state, env_params)
         prev_obs = env.observe(prev_state, env_params)
@@ -349,9 +351,9 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
     B = terminal_state.steps.shape[0]
     env_ids = env_offset + jnp.arange(B)
     zeros = jnp.zeros((B,), jnp.float32)
-    keys = jax.random.split(key, T)
+    env_keys = derive_env_keys(jax.random.split(key, T), env_ids)
     (state0, log_pf, log_pb), ys = jax.lax.scan(
-        step_fn, (terminal_state, zeros, zeros), keys)
+        step_fn, (terminal_state, zeros, zeros), env_keys)
     batch = None
     if collect:
         # scan step i visited forward-time state T-i; reversing the stacked

@@ -85,9 +85,25 @@ def masked_logprobs(logits: jax.Array, mask: jax.Array) -> jax.Array:
     return jax.nn.log_softmax(masked, axis=-1)
 
 
+def derive_env_keys(keys: jax.Array, env_ids: jax.Array) -> jax.Array:
+    """Per-(step, env) key grid ``fold_in(keys[t], env_ids[i])``.
+
+    ``keys``: (T, 2) step keys (``jax.random.split(key, T)``); ``env_ids``:
+    (B,) global env indices.  Returns (T, B, 2).  Bit-identical to folding
+    each step key inside the rollout scan — ``vmap`` does not change
+    ``fold_in``'s per-element math — but computed as *one* vectorized op
+    before the scan instead of B folds serialized at every scan step, which
+    is what kept the fold chain off the cached-decode hot path
+    (ROADMAP item 4; asserted in ``tests/test_serve.py``).
+    """
+    return jax.vmap(jax.vmap(jax.random.fold_in, in_axes=(None, 0)),
+                    in_axes=(0, None))(keys, env_ids)
+
+
 def sample_masked_per_env(key: jax.Array, logits: jax.Array, mask: jax.Array,
                           eps: float = 0.0,
-                          env_ids: jax.Array = None
+                          env_ids: jax.Array = None,
+                          env_keys: jax.Array = None
                           ) -> Tuple[jax.Array, jax.Array]:
     """Batched masked sampling where row i's draw depends only on
     ``(key, env_ids[i])``.
@@ -98,12 +114,19 @@ def sample_masked_per_env(key: jax.Array, logits: jax.Array, mask: jax.Array,
     global envs ``[off, off + b)`` passes ``env_ids = off + arange(b)`` and
     reproduces exactly the actions a single-device run samples for those
     envs (the parity contract of :mod:`repro.algo.plan`).
+
+    Callers that already hold the folded per-env keys (rollouts hoist the
+    whole fold grid out of their scan via :func:`derive_env_keys`; the
+    serving engine gathers per-lane keys) pass them as ``env_keys`` (B, 2)
+    and ``key``/``env_ids`` are ignored.
     """
-    if env_ids is None:
-        env_ids = jnp.arange(logits.shape[0])
-    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, env_ids)
+    if env_keys is None:
+        if env_ids is None:
+            env_ids = jnp.arange(logits.shape[0])
+        env_keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key,
+                                                                   env_ids)
     return jax.vmap(lambda k, l, m: sample_masked(k, l, m, eps=eps))(
-        keys, logits, mask)
+        env_keys, logits, mask)
 
 
 def sample_masked(key: jax.Array, logits: jax.Array, mask: jax.Array,

@@ -35,6 +35,12 @@ class EnvEntry:
     smoke_overrides    factory overrides for a seconds-scale instance
     transforms         transform names constructible on the smoke instance
                        (the env-matrix CI job steps each of them)
+    serving            :mod:`repro.serve` support tier — "kv-cache" (the
+                       engine threads the incremental-decode KV cache
+                       through its lanes), "full-obs" (served with full
+                       re-observation per step), or "none" (no standalone
+                       policy to serve, e.g. a recipe whose custom driver
+                       owns the reward params)
     """
     name: str
     description: str
@@ -42,6 +48,7 @@ class EnvEntry:
     recipe: str
     smoke_overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
     transforms: Tuple[str, ...] = ("identity", "reward_exponent")
+    serving: str = "full-obs"
 
 
 def register_env(entry: EnvEntry) -> EnvEntry:
@@ -134,14 +141,16 @@ register_env(EnvEntry(
                 "reward (paper §3.2)",
     make=_bitseq, recipe="bitseq_tb",
     smoke_overrides={"n": 16, "k": 4},
-    transforms=("identity", "reward_exponent", "reward_cache")))
+    transforms=("identity", "reward_exponent", "reward_cache"),
+    serving="kv-cache"))
 
 register_env(EnvEntry(
     name="tfbind8",
     description="DNA binding-activity sequences, length 8, vocab 4 "
                 "(paper §3.3)",
     make=_tfbind8, recipe="tfbind8_tb",
-    transforms=("identity", "reward_exponent", "reward_cache")))
+    transforms=("identity", "reward_exponent", "reward_cache"),
+    serving="kv-cache"))
 
 register_env(EnvEntry(
     name="qm9",
@@ -156,7 +165,8 @@ register_env(EnvEntry(
                 "proxy classifier reward (paper §3.5)",
     make=_amp, recipe="amp_tb",
     smoke_overrides={"max_len": 12},
-    transforms=("identity", "reward_exponent", "time_limit:limit=8")))
+    transforms=("identity", "reward_exponent", "time_limit:limit=8"),
+    serving="kv-cache"))
 
 register_env(EnvEntry(
     name="phylo",
@@ -182,4 +192,5 @@ register_env(EnvEntry(
     smoke_overrides={"n": 4, "sigma": 0.2},
     # the EB-GFN driver owns the reward params (learned J); only
     # param-free wrappers compose with it
-    transforms=("identity",)))
+    transforms=("identity",),
+    serving="none"))

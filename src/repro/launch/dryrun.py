@@ -181,6 +181,16 @@ def lower_cell(arch: str, shape_id: str, mesh, *, smoke: bool = False,
     return lowered, {"step": "serve_step"}
 
 
+def _cost_analysis(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions: older
+    releases return a per-device *list* of dicts, newer ones a single dict
+    (and either may be None when the backend records no cost metadata)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def run_cell(arch: str, shape_id: str, mesh_kind: str, *,
              smoke: bool = False, save: bool = True,
              calibrate: bool = True, variant: str = "baseline") -> dict:
@@ -215,7 +225,7 @@ def run_cell(arch: str, shape_id: str, mesh_kind: str, *,
                 getattr(mem, "peak_memory_in_bytes",
                         getattr(mem, "temp_size_in_bytes", 0))),
         }
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_analysis(compiled)
         rec["cost"] = {
             "flops": float(ca.get("flops", 0.0)),
             "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
@@ -251,7 +261,7 @@ def _calibrate(arch: str, shape_id: str, mesh, cfg, *, smoke: bool,
         lowered, _ = lower_cell(arch, shape_id, mesh, smoke=smoke,
                                 cfg_override=cal_cfg, variant=variant)
         compiled = lowered.compile()
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_analysis(compiled)
         out[f"L{L}"] = {
             "flops": float(ca.get("flops", 0.0)),
             "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

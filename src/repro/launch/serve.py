@@ -1,71 +1,134 @@
-"""Serving driver: batched decode with a KV cache (the rollout engine for
-sequence environments at scale — paper §2's forward_rollout, LM-sized).
+"""Serving driver: the CLI/HTTP frontend over :mod:`repro.serve`.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b --smoke \
-      --batch 4 --prompt-len 16 --gen 32
+Turns trained GFlowNet checkpoints into a sampling service — a compiled,
+continuously-batched engine per (env, transforms, checkpoint), scheduled by
+:class:`repro.serve.Scheduler` (this replaces the former dormant LM-decode
+driver; the LM decode path lives on in ``repro.models.lm`` and
+``tests/test_serving.py``).
+
+One-shot sampling::
+
+    PYTHONPATH=src python -m repro.launch.serve --env bitseq --smoke \
+        --num-samples 4 --seed 7
+    PYTHONPATH=src python -m repro.launch.serve --env bitseq \
+        --checkpoint checkpoints/bitseq_tb --num-samples 64 \
+        --temperature 0.8 --reward-beta 2.0 --json
+
+HTTP endpoint (POST /sample, GET /envs — see :mod:`repro.serve.api`)::
+
+    PYTHONPATH=src python -m repro.launch.serve --http --port 8777
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
 
-from ..configs.registry import get_config
-from ..models import lm as LM
-
-
-def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
-          greedy: bool = False):
-    key = jax.random.PRNGKey(seed)
-    params = LM.init_params(key, cfg)
-    max_len = prompt_len + gen + 1
-    cache = LM.init_cache(cfg, batch, max_len)
-    if cfg.family == "encdec":
-        frames = jax.random.normal(key, (batch, prompt_len, cfg.d_model),
-                                   jnp.bfloat16)
-        cache["cross"] = LM.build_cross_cache(params, cfg, frames)
-
-    step = jax.jit(lambda p, t, c: LM.decode_step(p, cfg, t, c))
-
-    prompt = jax.random.randint(key, (batch, prompt_len), 0,
-                                cfg.vocab_size)
-    # prefill token-by-token (simple path; production uses fused prefill)
-    tok = prompt[:, :1]
-    for t in range(prompt_len):
-        logits, cache = step(params, prompt[:, t:t + 1], cache)
-    out_tokens = []
-    t0 = time.time()
-    for t in range(gen):
-        key, k2 = jax.random.split(key)
-        if greedy:
-            tok = jnp.argmax(logits, -1)[:, None]
-        else:
-            tok = jax.random.categorical(k2, logits, -1)[:, None]
-        out_tokens.append(tok)
-        logits, cache = step(params, tok, cache)
-    jax.block_until_ready(logits)
-    dt = time.time() - t0
-    gen_toks = jnp.concatenate(out_tokens, axis=1)
-    return gen_toks, batch * gen / dt
+def __getattr__(name):
+    # back-compat: the LM token-decode driver this module used to hold
+    # moved to repro.launch.lm_decode; keep its `serve` importable from
+    # here (lazily, so the sampling-service CLI stays jax-import-free
+    # until it actually runs)
+    if name == "serve":
+        from .lm_decode import serve
+        return serve
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2.5-32b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--greedy", action="store_true")
-    args = ap.parse_args()
-    cfg = get_config(args.arch, smoke=args.smoke)
-    toks, tps = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                      gen=args.gen, greedy=args.greedy)
-    print(f"generated {toks.shape} tokens at {tps:.1f} tok/s")
-    print("first sequence:", toks[0][:16].tolist())
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve",
+        description="Sample trained GFlowNet checkpoints as a service.")
+    ap.add_argument("--env", default=None, metavar="NAME",
+                    help="registered environment to sample "
+                         "(see python -m repro.run --list-envs)")
+    ap.add_argument("--num-samples", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="request seed (same seed => same samples, "
+                         "regardless of batching)")
+    ap.add_argument("--temperature", type=float, default=1.0,
+                    help="forward-logit scale of this request's lanes "
+                         "(tempered policy; 1.0 is the trained policy)")
+    ap.add_argument("--reward-beta", type=float, default=1.0,
+                    help="reward exponent beta served through the engine's "
+                         "RewardExponent layer (R -> R^beta)")
+    ap.add_argument("--transform", action="append", metavar="SPEC",
+                    dest="transforms",
+                    help="env transform spec, repeatable (as in repro.run)")
+    ap.add_argument("--set", action="append", metavar="KEY=VALUE",
+                    dest="overrides",
+                    help="env-factory override, forwarded to make_env")
+    ap.add_argument("--smoke", action="store_true",
+                    help="apply the env's registered smoke_overrides "
+                         "(seconds-scale instance)")
+    ap.add_argument("--checkpoint", default=None, metavar="DIR",
+                    help="checkpoint directory to load policy params from "
+                         "(default: fresh-initialized policy)")
+    ap.add_argument("--step", type=int, default=None,
+                    help="checkpoint step (default: latest complete)")
+    ap.add_argument("--lanes", type=int, default=16,
+                    help="engine lane-pool size (static batch of the "
+                         "compiled step)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the SampleResult as JSON instead of a "
+                         "summary")
+    ap.add_argument("--http", action="store_true",
+                    help="run the stdlib-HTTP JSON endpoint instead of a "
+                         "one-shot request")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8777)
+    args = ap.parse_args(argv)
+
+    from ..serve import SampleRequest, Scheduler, serve_http
+
+    sched = Scheduler(num_lanes=args.lanes)
+    if args.http:
+        serve_http(sched, host=args.host, port=args.port)
+        return 0
+
+    if args.env is None:
+        ap.error("--env is required (or --http for the endpoint)")
+
+    from ..envs.registry import get_env
+    overrides = {}
+    if args.smoke:
+        overrides.update(get_env(args.env).smoke_overrides)
+    for pair in args.overrides or []:
+        if "=" not in pair:
+            ap.error(f"expected key=value, got {pair!r}")
+        k, v = pair.split("=", 1)
+        try:
+            import ast
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    req = SampleRequest(env=args.env, num_samples=args.num_samples,
+                        seed=args.seed, logit_temp=args.temperature,
+                        reward_beta=args.reward_beta,
+                        transforms=tuple(args.transforms or ()),
+                        overrides=overrides, checkpoint=args.checkpoint,
+                        step=args.step)
+    t0 = time.perf_counter()
+    rid = sched.submit(req)
+    result = sched.run()[rid]
+    dt = time.perf_counter() - t0
+
+    if args.json:
+        print(json.dumps(result.to_dict()))
+        return 0
+    print(f"sampled {len(result.samples)} x {args.env} in {dt:.2f}s "
+          f"(engine latency {result.latency_s:.2f}s, "
+          f"{len(result.samples) / dt:.1f} samples/s)")
+    for i, (s, lr, st) in enumerate(zip(result.samples, result.log_rewards,
+                                        result.steps)):
+        flat = s if not isinstance(s, list) else s
+        head = str(flat)[:60]
+        print(f"  [{i}] log_r={lr:9.3f} steps={st:3d} obs={head}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

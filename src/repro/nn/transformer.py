@@ -183,22 +183,39 @@ def cache_fill(p: Params, cache: Params, xs: jax.Array, *,
 
 def cache_append(p: Params, cache: Params, x_new: jax.Array,
                  slot: jax.Array, *, num_heads: int) -> Params:
-    """Write one token's K/V per layer at ``slot`` — a traced *scalar* index
-    shared by the whole batch (a cheap ``dynamic_update_slice``, no per-env
-    scatter).  The uniform slot is correct because the rollout appends the
-    token added at scan step t-1 into slot t for every env: envs whose step
-    t-1 added nothing (stopped / terminal) get a garbage entry at a slot
-    their ``length`` mask never reaches, and envs at max length re-write
-    their newest token's slot with identical values."""
+    """Write one token's K/V per layer at ``slot``.
+
+    ``slot`` is either a traced *scalar* index shared by the whole batch (a
+    cheap ``dynamic_update_slice``, no per-env scatter) or a (B,) *vector*
+    of per-row slots (a ``.at[arange(B), slot]`` scatter — the serving
+    engine's continuous-batching path, where each lane sits at its own
+    trajectory step).  Per-row writes land the same values at the same
+    (row, slot) locations a scalar write would for that row, so a lane's
+    cache rows are bitwise those of a dedicated rollout at its step.
+
+    The batch-uniform scalar slot is correct for lockstep rollouts because
+    they append the token added at scan step t-1 into slot t for every env:
+    envs whose step t-1 added nothing (stopped / terminal) get a garbage
+    entry at a slot their ``length`` mask never reaches, and envs at max
+    length re-write their newest token's slot with identical values."""
     out: Params = {}
+    per_row = jnp.ndim(slot) == 1
+    if per_row:
+        rows = jnp.arange(slot.shape[0])
     for i in range(_num_layers(p)):
         lc = cache[f"layer_{i}"]
         kn, vn = _kv_heads(p[f"layer_{i}"], x_new, num_heads)  # (B, H, hd)
-        start = (0, slot, 0, 0)
-        out[f"layer_{i}"] = {
-            "k": jax.lax.dynamic_update_slice(lc["k"], kn[:, None], start),
-            "v": jax.lax.dynamic_update_slice(lc["v"], vn[:, None], start),
-        }
+        if per_row:
+            out[f"layer_{i}"] = {"k": lc["k"].at[rows, slot].set(kn),
+                                 "v": lc["v"].at[rows, slot].set(vn)}
+        else:
+            start = (0, slot, 0, 0)
+            out[f"layer_{i}"] = {
+                "k": jax.lax.dynamic_update_slice(lc["k"], kn[:, None],
+                                                  start),
+                "v": jax.lax.dynamic_update_slice(lc["v"], vn[:, None],
+                                                  start),
+            }
     return out
 
 
@@ -255,9 +272,9 @@ def encoder_apply_cached(p: Params, x_new: jax.Array, cache: Params,
                          attn_impl: str = "auto", slot: Optional[jax.Array]
                          = None):
     """One incremental-decode step: append ``x_new``'s K/V per layer at
-    scalar slot ``slot`` (default ``max(lengths)``), then attend the single
-    latent query against the cache masked to ``lengths``.  Returns
-    ``(y (B, D), new_cache)``.
+    ``slot`` (scalar, default ``max(lengths)``; or per-row (B,) — see
+    :func:`cache_append`), then attend the single latent query against the
+    cache masked to ``lengths``.  Returns ``(y (B, D), new_cache)``.
     """
     cache = cache_append(p, cache, x_new,
                          jnp.max(lengths) if slot is None else slot,

@@ -341,9 +341,12 @@ def main(argv=None) -> int:
         width = max((len(n) for n in env_names()), default=0)
         rwidth = max((len(get_env(n).recipe) for n in env_names()),
                      default=0)
+        swidth = max((len(get_env(n).serving) for n in env_names()),
+                     default=0)
         for n in env_names():
             e = get_env(n)
             print(f"{n:<{width}}  recipe={e.recipe:<{rwidth}}  "
+                  f"serving={e.serving:<{swidth}}  "
                   f"transforms={','.join(e.transforms)}  {e.description}")
         return 0
 

@@ -1,0 +1,18 @@
+"""Sampling-as-a-service: a compiled, continuously-batched GFlowNet
+inference engine over trained checkpoints.
+
+- :class:`~repro.serve.engine.SamplingEngine` — fixed lane pool, one jitted
+  step shared by all lanes, host-side drain + recompile-free refill
+  (continuous batching over variable-length rollouts).
+- :class:`~repro.serve.scheduler.Scheduler` — coalesces requests by
+  (env, transforms, checkpoint) into engine instances; per-request
+  temperatures ride on lanes.
+- :mod:`~repro.serve.api` — request/response dataclasses + stdlib-HTTP
+  JSON endpoint; the CLI lives in :mod:`repro.launch.serve`.
+"""
+from .api import SampleRequest, SampleResult, serve_http
+from .engine import EngineResult, SamplingEngine
+from .scheduler import Scheduler
+
+__all__ = ["SampleRequest", "SampleResult", "serve_http",
+           "EngineResult", "SamplingEngine", "Scheduler"]

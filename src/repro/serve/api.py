@@ -1,0 +1,161 @@
+"""Serving frontend: request/response dataclasses + a stdlib-HTTP JSON
+endpoint over the :class:`~repro.serve.scheduler.Scheduler`.
+
+The wire format is deliberately tiny — one POST route, JSON in/out, no
+dependencies beyond ``http.server`` — because the interesting machinery
+(compiled continuous batching, per-lane temperatures, checkpoint loading)
+all lives below the :class:`SampleRequest` surface:
+
+    POST /sample   {"env": "bitseq", "num_samples": 4, "seed": 7,
+                    "logit_temp": 0.8, "reward_beta": 2.0,
+                    "transforms": [], "overrides": {"n": 16, "k": 4},
+                    "checkpoint": "checkpoints/bitseq_tb", "step": null}
+    GET  /envs     registry listing with per-env serving support
+
+CLI quickstart (see the README "Serving" section)::
+
+    python -m repro.launch.serve --env bitseq --smoke --num-samples 4
+    python -m repro.launch.serve --http --port 8777
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from http.server import BaseHTTPRequestHandler, HTTPServer
+from typing import Any, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleRequest:
+    """One sampling request.
+
+    env          registered environment name (:mod:`repro.envs.registry`)
+    num_samples  trajectories to sample
+    seed         request PRNG seed — requests are reproducible by
+                 construction: same (env, checkpoint, seed) => same samples,
+                 regardless of batching (the engine parity contract)
+    logit_temp   per-request forward-logit scale (tempered policy)
+    reward_beta  per-request reward exponent β served through the engine's
+                 RewardExponent params layer (R -> R^β)
+    transforms   env-transform specs stacked onto the env (innermost first)
+    overrides    env-factory overrides (``--set`` surface), e.g. bitseq
+                 ``{"n": 16, "k": 4}``
+    checkpoint   checkpoint directory to load policy params from (via
+                 ``CheckpointManager.restore_subtree``); fresh-init when None
+    step         checkpoint step (default: latest complete)
+    """
+    env: str
+    num_samples: int = 1
+    seed: int = 0
+    logit_temp: float = 1.0
+    reward_beta: float = 1.0
+    transforms: Tuple[str, ...] = ()
+    overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    checkpoint: Optional[str] = None
+    step: Optional[int] = None
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SampleRequest":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown request field(s) {sorted(unknown)}; "
+                             f"accepted: {sorted(known)}")
+        if "env" not in d:
+            raise ValueError("request needs an 'env' field")
+        d = dict(d)
+        if "transforms" in d:
+            d["transforms"] = tuple(d["transforms"])
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleResult:
+    """Completed request: terminal observations + log-rewards per sample.
+
+    ``samples[i]`` is sample i's terminal observation (token grid /
+    coordinates — the same layout ``RolloutBatch.obs[-1]`` rows carry);
+    ``steps[i]`` its trajectory length; ``latency_s`` the submit-to-drain
+    wall time inside the engine.
+    """
+    request_id: int
+    env: str
+    samples: list
+    log_rewards: list
+    steps: list
+    latency_s: float
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def result_from_engine(request: SampleRequest, engine_result,
+                       request_id: int) -> SampleResult:
+    return SampleResult(
+        request_id=request_id,
+        env=request.env,
+        samples=engine_result.samples.tolist(),
+        log_rewards=[float(x) for x in engine_result.log_rewards],
+        steps=[int(x) for x in engine_result.steps],
+        latency_s=float(engine_result.latency_s))
+
+
+# ---------------------------------------------------------------------------
+# stdlib HTTP endpoint
+# ---------------------------------------------------------------------------
+
+def make_handler(scheduler):
+    """A ``BaseHTTPRequestHandler`` bound to ``scheduler``."""
+
+    class Handler(BaseHTTPRequestHandler):
+        def _reply(self, code: int, doc: Dict[str, Any]) -> None:
+            body = json.dumps(doc).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, fmt, *args):  # quiet by default
+            pass
+
+        def do_GET(self):
+            if self.path.rstrip("/") in ("", "/envs"):
+                from ..envs.registry import env_names, get_env
+                rows = [{"env": n,
+                         "serving": get_env(n).serving,
+                         "recipe": get_env(n).recipe,
+                         "description": get_env(n).description}
+                        for n in env_names()]
+                self._reply(200, {"envs": rows})
+            else:
+                self._reply(404, {"error": f"unknown path {self.path!r}"})
+
+        def do_POST(self):
+            if self.path.rstrip("/") != "/sample":
+                self._reply(404, {"error": f"unknown path {self.path!r}"})
+                return
+            try:
+                n = int(self.headers.get("Content-Length", 0))
+                req = SampleRequest.from_dict(json.loads(self.rfile.read(n)))
+                rid = scheduler.submit(req)
+                result = scheduler.run()[rid]
+                self._reply(200, result.to_dict())
+            except (ValueError, KeyError, json.JSONDecodeError) as e:
+                self._reply(400, {"error": str(e)})
+
+    return Handler
+
+
+def serve_http(scheduler, host: str = "127.0.0.1", port: int = 8777,
+               log=print) -> None:
+    """Blocking single-threaded JSON endpoint over ``scheduler``."""
+    server = HTTPServer((host, port), make_handler(scheduler))
+    log(f"serving on http://{host}:{port}  "
+        f"(POST /sample, GET /envs; ctrl-c to stop)")
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.server_close()

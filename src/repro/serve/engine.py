@@ -1,0 +1,358 @@
+"""Continuously-batched GFlowNet sampling engine.
+
+One engine owns a fixed pool of ``num_lanes`` *lanes* — slots of a single
+compiled program — each carrying its own env state, KV cache rows, RNG
+stream, request id, and temperatures.  Every call to the jitted step
+advances all lanes one transition; when a lane's trajectory terminates, its
+sample is drained host-side and the lane is immediately refilled from the
+pending queue **without recompilation** (all shapes are static in
+``num_lanes``), so variable-length rollouts never wait for a batch's max
+length and heterogeneous requests pack into one device batch.  This is the
+compile-once/run-many serving shape the paper's throughput claims imply:
+compilation is paid once per (env, policy, lane count), then amortized over
+every request the engine ever serves.
+
+Determinism / parity contract
+-----------------------------
+A request is sampled from ``jax.random.split(request_key, T)`` step keys,
+with sample ``i`` drawing through ``fold_in(step_keys[t], i)`` at its step
+``t`` — exactly the stream :func:`repro.core.rollout.forward_rollout`
+consumes (after PR 6's hoisted :func:`repro.core.types.derive_env_keys`).
+Since every per-lane operation is row-independent (per-row cache scatter,
+per-row length-masked attention, per-row env dynamics), a lane replays its
+trajectory bitwise regardless of which other requests share the pool or
+which lane it landed on: engine samples for a request equal
+``forward_rollout(request_key, env, ..., num_samples)`` bit-for-bit
+(``tests/test_serve.py``).
+
+Per-lane temperature
+--------------------
+Two knobs, both request-scoped and lane-resident:
+
+- ``logit_temp`` scales the forward logits before sampling (a tempered
+  *policy*; 1.0 multiplies through exactly, preserving parity).
+- ``reward_beta`` is threaded through a :class:`RewardExponent`-style
+  params layer the engine owns: the env the engine serves is wrapped so
+  the β leaf is a ``(num_lanes,)`` vector and ``log_reward`` broadcasts
+  per lane — requests at different reward temperatures coexist in one
+  batch (Shen et al.'s tempered-sampling knob, served).
+
+Sequence envs with the incremental-observation protocol keep PR 3's
+KV-cache fast path: each lane appends its newest token's K/V at its *own*
+trajectory step (a per-row scatter — see
+:func:`repro.nn.transformer.cache_append`); everything else falls back to
+full re-observation per step.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Dict, List, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.rollout import _cache_engaged, _policy_entry
+from ..core.types import pytree_dataclass, sample_masked_per_env
+from ..envs.base import Environment, _select_state
+from ..envs.transforms import RewardExponent, TransformedParams
+
+
+@pytree_dataclass
+class LaneState:
+    """Device-resident state of the lane pool (leading dim = num_lanes).
+
+    step_keys    (L, T, 2)  per-lane step-key table split(request_key, T)
+    env_id       (L,)       sample index within the lane's request (fold_in)
+    request_id   (L,)       engine-local request id; -1 = idle lane
+    t            (L,)       per-lane trajectory step counter
+    logit_temp   (L,)       forward-logit scale
+    reward_beta  (L,)       reward exponent β (served via the params layer)
+    log_r        (L,)       accumulated terminal log-reward
+    """
+    env_state: Any
+    cache: Any
+    prev_action: jax.Array
+    step_keys: jax.Array
+    env_id: jax.Array
+    request_id: jax.Array
+    t: jax.Array
+    logit_temp: jax.Array
+    reward_beta: jax.Array
+    log_r: jax.Array
+
+
+class _PendingSample(NamedTuple):
+    request_id: int
+    env_id: int
+    step_keys: np.ndarray       # (T, 2) uint32
+    logit_temp: float
+    reward_beta: float
+
+
+class EngineResult(NamedTuple):
+    """One completed request: ``samples[i]`` is the terminal observation of
+    sample ``i`` (same layout as ``RolloutBatch.obs[-1]`` rows)."""
+    request_id: int
+    samples: np.ndarray         # (num_samples, ...) terminal observations
+    log_rewards: np.ndarray     # (num_samples,)
+    steps: np.ndarray           # (num_samples,) trajectory lengths
+    latency_s: float
+
+
+class SamplingEngine:
+    """Compiled sampling service over one (env, policy params) pair.
+
+    ``env``/``env_params`` may already carry a transform stack; the engine
+    wraps one more :class:`RewardExponent` layer on top to own the per-lane
+    β vector (β=1 multiplies log-rewards through exactly, so an untempered
+    engine is bitwise the bare env).  ``use_cache`` as in
+    :func:`repro.core.rollout.forward_rollout`.
+    """
+
+    def __init__(self, env: Environment, env_params, policy, policy_params,
+                 *, num_lanes: int = 16,
+                 use_cache: Union[bool, str] = "auto",
+                 max_steps: Optional[int] = None,
+                 steps_per_sync: Union[int, str] = "auto"):
+        policy, apply_fn = _policy_entry(policy)
+        self.cached = _cache_engaged(env, policy, use_cache)
+        self.env = RewardExponent(env, beta=1.0)
+        self.inner_params = env_params
+        self.num_lanes = L = int(num_lanes)
+        self.T = T = int(max_steps if max_steps is not None
+                         else env.max_steps)
+        # how many lane transitions one compiled block advances before the
+        # host looks at the pool again: larger blocks amortize dispatch +
+        # host-sync cost across micro-steps (a scan inside the jit, like
+        # forward_rollout's), at the price of drain/refill granularity —
+        # a finished lane idles up to steps_per_sync-1 transitions before
+        # the host notices.  Parity is invariant: terminal lanes no-op.
+        if steps_per_sync == "auto":
+            steps_per_sync = max(1, min(4, T // 2))
+        self.steps_per_sync = M = max(1, int(steps_per_sync))
+        self._policy, self._apply_fn = policy, apply_fn
+        self._policy_params = policy_params
+        self._pending: deque = deque()
+        self._requests: Dict[int, dict] = {}
+        self._results: Dict[int, EngineResult] = {}
+        self._next_id = 0
+        self._occupied = np.zeros(L, bool)
+        self.steps_run = 0
+
+        env_w = self.env
+
+        def params_with_beta(beta_vec):
+            return TransformedParams(inner=env_params,
+                                     extra={"beta": beta_vec})
+
+        def step(lane: LaneState):
+            ep = params_with_beta(lane.reward_beta)
+            state = lane.env_state
+            active = lane.request_id >= 0
+            fmask = env_w.forward_mask(state, ep)
+            was_done = env_w.is_terminal(state, ep)
+            live = jnp.logical_and(active, jnp.logical_not(was_done))
+            if self.cached:
+                token, pos, length = env_w.observe_last(state, ep,
+                                                        lane.prev_action)
+                out, cache = policy.apply_cached(policy_params, lane.cache,
+                                                 token, pos, length,
+                                                 step=lane.t)
+            else:
+                out = apply_fn(policy_params, env_w.observe(state, ep))
+                cache = lane.cache
+            # per-lane step key: the same fold_in(step_keys[t], env_id)
+            # chain forward_rollout derives for its whole batch up front
+            t_idx = jnp.clip(lane.t, 0, T - 1)
+            key_t = jnp.take_along_axis(
+                lane.step_keys, t_idx[:, None, None], axis=1)[:, 0]
+            env_keys = jax.vmap(jax.random.fold_in)(key_t, lane.env_id)
+            logits = out["logits"] * lane.logit_temp[:, None]
+            safe_mask = jnp.where(live[:, None], fmask,
+                                  jnp.ones_like(fmask))
+            actions, _ = sample_masked_per_env(None, logits, safe_mask,
+                                               env_keys=env_keys)
+            _, nstate, log_r, done, _ = env_w.step(state, actions, ep)
+            # idle lanes hold their state verbatim (env.step only no-ops
+            # terminal states; an idle lane may hold an initial one)
+            nstate = _select_state(jnp.logical_not(live), state, nstate)
+            newly_done = jnp.logical_and(live, done)
+            new_lane = LaneState(
+                env_state=nstate, cache=cache,
+                prev_action=jnp.where(live, actions, lane.prev_action),
+                step_keys=lane.step_keys, env_id=lane.env_id,
+                request_id=lane.request_id,
+                t=jnp.where(live, lane.t + 1, lane.t),
+                logit_temp=lane.logit_temp, reward_beta=lane.reward_beta,
+                log_r=lane.log_r + jnp.where(live, log_r, 0.0))
+            return new_lane, newly_done
+
+        def refill(lane: LaneState, mask, step_keys, env_id, request_id,
+                   logit_temp, reward_beta):
+            """Reset the lanes under ``mask`` to fresh request state; all
+            shapes are static, so refills never recompile.  Fresh lanes take
+            a brand-new reset state and cache row — nothing of the previous
+            occupant survives."""
+            ep = params_with_beta(lane.reward_beta)
+            _, state0 = env_w.reset(L, ep)
+            sel = lambda a, b: jnp.where(
+                mask.reshape(mask.shape + (1,) * (a.ndim - 1)), a, b)
+            env_state = jax.tree_util.tree_map(sel, state0, lane.env_state)
+            if self.cached:
+                cache0 = policy.cache_init(policy_params, L)
+                cache = jax.tree_util.tree_map(sel, cache0, lane.cache)
+            else:
+                cache = lane.cache
+            w = lambda a, b: jnp.where(mask, a, b)
+            return LaneState(
+                env_state=env_state, cache=cache,
+                prev_action=w(jnp.zeros((L,), jnp.int32), lane.prev_action),
+                step_keys=jnp.where(mask[:, None, None], step_keys,
+                                    lane.step_keys),
+                env_id=w(env_id, lane.env_id),
+                request_id=w(request_id, lane.request_id),
+                t=w(jnp.zeros((L,), jnp.int32), lane.t),
+                logit_temp=w(logit_temp, lane.logit_temp),
+                reward_beta=w(reward_beta, lane.reward_beta),
+                log_r=w(jnp.zeros((L,), jnp.float32), lane.log_r))
+
+        def block(lane: LaneState):
+            lane, nds = jax.lax.scan(lambda l, _: step(l), lane, None,
+                                     length=M)
+            # a lane finishes at most once per occupancy (live goes False
+            # at its terminal micro-step), so OR-ing over the block is the
+            # exact set of lanes that completed since the last sync
+            return lane, jnp.any(nds, axis=0)
+
+        self._jstep = jax.jit(block)
+        self._jrefill = jax.jit(refill)
+        self._jobserve = jax.jit(
+            lambda lane: env_w.observe(
+                lane.env_state, params_with_beta(lane.reward_beta)))
+
+        _, state0 = env_w.reset(L, params_with_beta(jnp.ones(L)))
+        cache0 = policy.cache_init(policy_params, L) if self.cached else ()
+        self.lane = LaneState(
+            env_state=state0, cache=cache0,
+            prev_action=jnp.zeros((L,), jnp.int32),
+            step_keys=jnp.zeros((L, T, 2), jnp.uint32),
+            env_id=jnp.zeros((L,), jnp.int32),
+            request_id=jnp.full((L,), -1, jnp.int32),
+            t=jnp.zeros((L,), jnp.int32),
+            logit_temp=jnp.ones((L,), jnp.float32),
+            reward_beta=jnp.ones((L,), jnp.float32),
+            log_r=jnp.zeros((L,), jnp.float32))
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, *, num_samples: int = 1, seed: int = 0,
+               key: Optional[jax.Array] = None, logit_temp: float = 1.0,
+               reward_beta: float = 1.0) -> int:
+        """Queue a request for ``num_samples`` trajectories; returns its
+        engine-local request id.  ``key`` (or ``PRNGKey(seed)``) is the
+        request key of the parity contract: sample ``i`` reproduces
+        ``forward_rollout(key, ...)`` trajectory ``i`` when
+        ``logit_temp == reward_beta == 1``."""
+        if num_samples < 1:
+            raise ValueError(f"num_samples must be >= 1, got {num_samples}")
+        rid = self._next_id
+        self._next_id += 1
+        if key is None:
+            key = jax.random.PRNGKey(seed)
+        step_keys = np.asarray(jax.random.split(key, self.T),
+                               dtype=np.uint32)
+        for i in range(num_samples):
+            self._pending.append(_PendingSample(rid, i, step_keys,
+                                                float(logit_temp),
+                                                float(reward_beta)))
+        self._requests[rid] = {"num_samples": int(num_samples),
+                               "collected": {},
+                               "t0": time.perf_counter()}
+        return rid
+
+    # -- lane pool management ------------------------------------------------
+    def _fill(self) -> None:
+        if not self._pending:
+            return
+        free = np.nonzero(~self._occupied)[0]
+        if free.size == 0:
+            return
+        L, T = self.num_lanes, self.T
+        mask = np.zeros(L, bool)
+        step_keys = np.zeros((L, T, 2), np.uint32)
+        env_id = np.zeros(L, np.int32)
+        request_id = np.zeros(L, np.int32)
+        logit_temp = np.ones(L, np.float32)
+        reward_beta = np.ones(L, np.float32)
+        for b in free:
+            if not self._pending:
+                break
+            s = self._pending.popleft()
+            mask[b] = True
+            step_keys[b] = s.step_keys
+            env_id[b] = s.env_id
+            request_id[b] = s.request_id
+            logit_temp[b] = s.logit_temp
+            reward_beta[b] = s.reward_beta
+            self._occupied[b] = True
+        self.lane = self._jrefill(self.lane, jnp.asarray(mask),
+                                  jnp.asarray(step_keys),
+                                  jnp.asarray(env_id),
+                                  jnp.asarray(request_id),
+                                  jnp.asarray(logit_temp),
+                                  jnp.asarray(reward_beta))
+
+    def _drain(self, newly_done: np.ndarray) -> None:
+        idx = np.nonzero(newly_done)[0]
+        if idx.size == 0:
+            return
+        obs = np.asarray(self._jobserve(self.lane))
+        log_r = np.asarray(self.lane.log_r)
+        rid = np.asarray(self.lane.request_id)
+        eid = np.asarray(self.lane.env_id)
+        steps = np.asarray(self.lane.t)
+        now = time.perf_counter()
+        for b in idx:
+            req = self._requests[int(rid[b])]
+            req["collected"][int(eid[b])] = (obs[b], float(log_r[b]),
+                                             int(steps[b]))
+            self._occupied[b] = False
+            if len(req["collected"]) == req["num_samples"]:
+                got = [req["collected"][i]
+                       for i in range(req["num_samples"])]
+                self._results[int(rid[b])] = EngineResult(
+                    request_id=int(rid[b]),
+                    samples=np.stack([g[0] for g in got]),
+                    log_rewards=np.asarray([g[1] for g in got],
+                                           np.float32),
+                    steps=np.asarray([g[2] for g in got], np.int32),
+                    latency_s=now - req["t0"])
+
+    # -- drive ---------------------------------------------------------------
+    def step(self) -> int:
+        """Refill free lanes, advance the pool one compiled block
+        (``steps_per_sync`` transitions), drain completed lanes; returns
+        how many lanes finished in the block."""
+        self._fill()
+        self.lane, newly_done = self._jstep(self.lane)
+        self.steps_run += self.steps_per_sync
+        nd = np.asarray(newly_done)
+        self._drain(nd)
+        return int(nd.sum())
+
+    def run(self) -> Dict[int, EngineResult]:
+        """Drive until every submitted request has completed; returns (and
+        clears) the finished :class:`EngineResult`\\ s keyed by request id."""
+        budget = (len(self._pending) + int(self._occupied.sum())) \
+            * (self.T + self.steps_per_sync) + self.T + self.steps_per_sync
+        while self._pending or self._occupied.any():
+            self.step()
+            budget -= self.steps_per_sync
+            if budget < 0:
+                raise RuntimeError(
+                    "engine failed to drain its lane pool within the "
+                    "worst-case step budget — an env whose trajectories "
+                    "exceed max_steps?")
+        out, self._results = self._results, {}
+        return out

@@ -1,0 +1,117 @@
+"""Request scheduler: coalesces heterogeneous requests into engines.
+
+Requests are grouped by their *engine key* — ``(env, transforms, overrides,
+checkpoint, step)`` — because that tuple pins the compiled program and the
+policy params an engine serves.  Everything else a request varies (sample
+count, seed, both temperatures) is lane-resident state inside one engine,
+so two requests for the same env/checkpoint at different temperatures
+share a device batch instead of forcing separate programs.
+
+Engines are built lazily on first use via the env registry
+(:mod:`repro.envs.registry`): the entry's factory + transform stack builds
+the environment, its default recipe's ``make_policy`` builds the policy,
+and the policy params come from ``CheckpointManager.restore_subtree`` when
+the request names a checkpoint (fresh ``policy.init`` otherwise — useful
+for smoke tests and priors).  Engines persist across ``run`` calls, which
+is the point: compilation is paid on the first request of a kind and
+amortized over all subsequent ones.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from .api import SampleRequest, SampleResult, result_from_engine
+from .engine import SamplingEngine
+
+
+def _engine_key(req: SampleRequest) -> Tuple:
+    return (req.env, tuple(req.transforms),
+            tuple(sorted(req.overrides.items())),
+            req.checkpoint, req.step)
+
+
+class Scheduler:
+    """Routes :class:`SampleRequest`\\ s to per-(env, checkpoint) engines.
+
+    ``num_lanes`` sizes each engine's lane pool; ``init_seed`` seeds env
+    params (and fresh policy params for checkpoint-less requests) so
+    scheduler instances are reproducible.
+    """
+
+    def __init__(self, num_lanes: int = 16, init_seed: int = 0):
+        self.num_lanes = int(num_lanes)
+        self.init_seed = int(init_seed)
+        self._engines: Dict[Tuple, SamplingEngine] = {}
+        self._routes: Dict[int, Tuple[Tuple, int, SampleRequest]] = {}
+        self._next_id = 0
+
+    # -- engine construction -------------------------------------------------
+    def _build_engine(self, req: SampleRequest) -> SamplingEngine:
+        from .. import recipes
+        from ..envs.registry import get_env, make_env
+
+        entry = get_env(req.env)
+        if entry.serving == "none":
+            raise ValueError(
+                f"env {req.env!r} is not servable: its recipe "
+                f"({entry.recipe!r}) has no standalone policy "
+                "(see the serving column of --list-envs)")
+        env = make_env(req.env, transforms=tuple(req.transforms),
+                       **dict(req.overrides))
+        env_params = env.init(jax.random.PRNGKey(self.init_seed))
+        recipe = recipes.get(entry.recipe)
+        policy = recipe.make_policy(env)
+        policy_params = policy.init(jax.random.PRNGKey(self.init_seed))
+        if req.checkpoint is not None:
+            from ..checkpoint.manager import CheckpointManager
+            mgr = CheckpointManager(req.checkpoint)
+            step = req.step if req.step is not None else mgr.latest_step()
+            if step is None:
+                raise ValueError(
+                    f"no complete checkpoint found in {req.checkpoint!r}")
+            policy_params = mgr.restore_subtree(step, policy_params)
+        return SamplingEngine(env, env_params, policy, policy_params,
+                              num_lanes=self.num_lanes)
+
+    def engine_for(self, req: SampleRequest) -> SamplingEngine:
+        key = _engine_key(req)
+        if key not in self._engines:
+            self._engines[key] = self._build_engine(req)
+        return self._engines[key]
+
+    @property
+    def num_engines(self) -> int:
+        return len(self._engines)
+
+    # -- request surface -----------------------------------------------------
+    def submit(self, req: SampleRequest) -> int:
+        """Queue a request; returns a scheduler-global request id."""
+        key = _engine_key(req)
+        engine = self.engine_for(req)
+        local = engine.submit(num_samples=req.num_samples, seed=req.seed,
+                              logit_temp=req.logit_temp,
+                              reward_beta=req.reward_beta)
+        rid = self._next_id
+        self._next_id += 1
+        self._routes[rid] = (key, local, req)
+        return rid
+
+    def run(self) -> Dict[int, SampleResult]:
+        """Drain every engine with queued work; returns completed results
+        keyed by the scheduler-global request ids."""
+        per_engine: Dict[Tuple, Dict[int, Any]] = {}
+        for key, engine in self._engines.items():
+            if engine._pending or engine._occupied.any():
+                per_engine[key] = engine.run()
+        out: Dict[int, SampleResult] = {}
+        done = []
+        for rid, (key, local, req) in self._routes.items():
+            res = per_engine.get(key, {}).get(local)
+            if res is not None:
+                out[rid] = result_from_engine(req, res, rid)
+                done.append(rid)
+        for rid in done:
+            del self._routes[rid]
+        return out
