@@ -45,19 +45,39 @@ def evaluate_trajectory(policy_apply: PolicyApply, params,
     def unflat(x):
         return x.reshape((Tp1, B) + x.shape[1:])
 
+    # On TPU with compiled kernels the mask + log-softmax + action gather
+    # fuses into one Pallas pass per direction (kernels.ops.traj_logprob,
+    # closed-form VJP); stop-probability extraction needs the full
+    # log-softmax tensor, so envs with a stop head keep the jnp path.
+    from ..kernels.ops import pallas_compiled, traj_logprob
+    fused = (stop_action is None and jax.default_backend() == "tpu"
+             and pallas_compiled())
+
     logits = unflat(out["logits"])
-    logp_f = masked_logprobs(logits, batch.fwd_mask)
-    log_pf = jnp.take_along_axis(
-        logp_f[:-1], batch.actions[..., None], axis=-1)[..., 0]
+    if fused:
+        _, pf_step = traj_logprob(
+            logits[:-1].transpose(1, 0, 2), batch.actions.T,
+            batch.fwd_mask[:-1].transpose(1, 0, 2), batch.valid.T)
+        log_pf = pf_step.T
+    else:
+        logp_f = masked_logprobs(logits, batch.fwd_mask)
+        log_pf = jnp.take_along_axis(
+            logp_f[:-1], batch.actions[..., None], axis=-1)[..., 0]
 
     logits_b = out.get("logits_b")
     if logits_b is None:
         logits_b = jnp.zeros(batch.bwd_mask.shape, jnp.float32)
     else:
         logits_b = unflat(logits_b)
-    logp_b = masked_logprobs(logits_b, batch.bwd_mask)
-    log_pb = jnp.take_along_axis(
-        logp_b[1:], batch.bwd_actions[..., None], axis=-1)[..., 0]
+    if fused:
+        _, pb_step = traj_logprob(
+            logits_b[1:].transpose(1, 0, 2), batch.bwd_actions.T,
+            batch.bwd_mask[1:].transpose(1, 0, 2), batch.valid.T)
+        log_pb = pb_step.T
+    else:
+        logp_b = masked_logprobs(logits_b, batch.bwd_mask)
+        log_pb = jnp.take_along_axis(
+            logp_b[1:], batch.bwd_actions[..., None], axis=-1)[..., 0]
 
     log_flow = unflat(out["log_flow"]) if "log_flow" in out else \
         jnp.zeros((Tp1, B), jnp.float32)

@@ -18,10 +18,11 @@ import jax.numpy as jnp
 from ..nn.core import (dense_apply, dense_init, embedding_apply,
                        embedding_init, mlp_apply, mlp_init, normal_init)
 from ..nn.transformer import (cache_fill, cache_init, decode_encoder_init,
-                              encoder_apply, encoder_apply_bank,
-                              encoder_apply_cached, encoder_init,
-                              encoder_query_cached,
+                              decoder_stacked_weights, encoder_apply,
+                              encoder_apply_bank, encoder_apply_cached,
+                              encoder_init, encoder_query_cached,
                               positional_embedding_init)
+from .types import sample_masked_per_env
 
 
 class Policy(NamedTuple):
@@ -35,6 +36,18 @@ class Policy(NamedTuple):
                    step=None)                          -> (out, cache)
       cache_fill(params, cache, tokens)                -> cache  (bulk load)
       query_cached(params, cache, length)              -> out    (no append)
+      sample_cached(params, cache, token, pos, length,
+                    env_keys, fwd_mask, step=None,
+                    eps=0.0, logit_temp=None)  -> (actions, log_pf,
+                                                   out, cache)
+
+    ``sample_cached`` is the FUSED per-step entry: append + query + masked
+    categorical sampling issued as one op from the rollout scan body / serve
+    lane step.  On CPU it composes the exact same jnp ops as the unfused
+    ``apply_cached`` + ``sample_masked_per_env`` chain (bitwise-identical
+    trajectories); on TPU with ``REPRO_PALLAS_COMPILE=1`` and statically-
+    zero ``eps`` it lowers the whole step through the fused Pallas kernel
+    (``kernels.ops.decode_step``).
     """
     init: Callable
     apply: Callable
@@ -42,6 +55,7 @@ class Policy(NamedTuple):
     apply_cached: Optional[Callable] = None
     cache_fill: Optional[Callable] = None
     query_cached: Optional[Callable] = None
+    sample_cached: Optional[Callable] = None
 
 
 def make_mlp_policy(obs_dim: int, action_dim: int,
@@ -195,9 +209,53 @@ def make_transformer_policy(vocab_size: int, max_len: int, action_dim: int,
                                  num_heads=num_heads)
         return heads_out(dense_apply(params["readout"], y))
 
+    def sample_cached(params, cache, token, pos, length, env_keys, fwd_mask,
+                      step=None, eps=0.0, logit_temp=None):
+        """Fused decode step: append + query + masked sampling as one op.
+
+        ``env_keys``: (B, 2) per-env sampling keys (the rollout's
+        ``derive_env_keys`` grid row / the engine's per-lane fold);
+        ``fwd_mask``: (B, A) legal forward actions (callers pass their
+        already-safed mask); ``logit_temp``: optional (B,) logit scale.
+        Returns ``(actions, log_pf, out, cache)`` with ``out`` the full
+        heads dict (same as ``apply_cached``'s).
+        """
+        from ..kernels.ops import pallas_compiled
+        eps_zero = isinstance(eps, (int, float)) and eps == 0.0
+        use_kernel = (eps_zero and jax.default_backend() == "tpu"
+                      and pallas_compiled())
+        if use_kernel:
+            from ..kernels.ops import decode_step
+            x_new = _embed(params, token.astype(jnp.int32), pos)
+            slot = jnp.max(length) if step is None else step
+            slot = jnp.clip(slot, 1, max_len)
+            # Gumbel-max over the masked log-softmax IS the categorical
+            # draw: jax.random.categorical(key_c, logp) computes
+            # argmax(logp + gumbel(key_c)), and key_c is the second of
+            # sample_masked's split(key, 3) — so the kernel consumes the
+            # same noise the jnp path would.
+            key_c = jax.vmap(lambda k: jax.random.split(k, 3)[1])(env_keys)
+            gumbel = jax.vmap(
+                lambda k: jax.random.gumbel(k, (action_dim,)))(key_c)
+            w = decoder_stacked_weights(params["decoder"])
+            w_out = params["readout"]["w"][:, :action_dim]
+            b_out = params["readout"]["b"][:action_dim]
+            actions, log_pf, y, cache = decode_step(
+                w, x_new, cache, length, slot, gumbel, fwd_mask,
+                w_out, b_out, logit_temp, num_heads=num_heads)
+            out = heads_out(dense_apply(params["readout"], y))
+            return actions, log_pf, out, cache
+        out, cache = apply_cached(params, cache, token, pos, length,
+                                  step=step)
+        logits = out["logits"] if logit_temp is None \
+            else out["logits"] * logit_temp[:, None]
+        actions, log_pf = sample_masked_per_env(None, logits, fwd_mask,
+                                                eps=eps, env_keys=env_keys)
+        return actions, log_pf, out, cache
+
     return Policy(init, apply, cache_init=cache_init_fn,
                   apply_cached=apply_cached, cache_fill=cache_fill_fn,
-                  query_cached=query_cached)
+                  query_cached=query_cached, sample_cached=sample_cached)
 
 
 def make_phylo_policy(env, num_layers: int = 6, dim: int = 32,

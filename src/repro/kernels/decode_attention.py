@@ -1,20 +1,45 @@
-"""Pallas TPU kernel for single-query (incremental-decode) attention.
+"""Pallas TPU kernels for the incremental-decode rollout hot path.
 
-The KV-cached rollout fast path issues one query per environment per step
-against a growing per-layer K/V cache (``core/rollout.py``'s cache-in-carry
-design).  That access pattern — q: (B, H, D) single rows, k/v: (B, S, H, D)
-cache slots, a per-batch valid-slot count — is exactly the "decode" shape of
-LLM inference kernels, so the same TPU mapping applies:
+Two kernels share this file:
+
+``decode_attention_pallas`` — single-query attention.  The KV-cached rollout
+fast path issues one query per environment per step against a growing
+per-layer K/V cache (``core/rollout.py``'s cache-in-carry design).  That
+access pattern — q: (B, H, D) single rows, k/v: (B, S, H, D) cache slots, a
+per-batch valid-slot count — is exactly the "decode" shape of LLM inference
+kernels, so the same TPU mapping applies:
 
   grid = (B, H, n_kv_blocks) with the kv axis innermost *sequential*; each
   (b, h) program streams (block_k x head_dim) K/V tiles HBM -> VMEM while the
   running-softmax state (m, l, acc) lives in VMEM scratch across kv steps.
-  Slots at or beyond ``kv_valid[b]`` are masked with -1e30 before the
-  streaming max/sum update, so cache capacity can exceed the live prefix.
+  Slots at or beyond ``kv_valid[b]`` are masked before the streaming
+  max/sum update, so cache capacity can exceed the live prefix.  Rows with
+  ``kv_valid == 0`` return a defined all-zero output (the attention weights
+  are an empty sum, not garbage).
 
-Validated on CPU in interpret mode against
-``kernels.ref.ref_decode_attention`` (the real-hardware path is identical
-modulo ``interpret=``).
+``decode_step_pallas`` — the fused decode STEP.  One program per environment
+executes the *entire* cached-rollout inner loop that ``core/rollout.py``
+otherwise issues as a chain of small XLA ops:
+
+  1. append:  K/V projections of the new token's embedding land in the
+     stacked cache ``(num_layers, B, capacity, D)`` at ``slot[b]``;
+  2. query:   the latent query (``q0``) runs through every decoder layer,
+     cross-attending to the just-updated cache masked to
+     ``lengths[b] + 1`` valid slots (BOS + tokens);
+  3. readout + sample: forward-action logits, action-mask + log-softmax,
+     and a Gumbel-max draw (the caller precomputes the Gumbel noise from
+     the same key ``jax.random.categorical`` would consume, so kernel
+     sampling matches the jnp path's draws);
+  4. it returns ``(action, log_pf, y, new_k, new_v)`` — everything the
+     scan body needs to advance the env and the TB/DB accumulators.
+
+The fused-step contract mirrors ``kernels.ref.ref_decode_step`` exactly
+(the interpret-mode parity oracle); ``kernels.ops.decode_step`` is the
+jitted entry that reshapes the (Lyr, B, C, H, hd) transformer cache into
+the kernel's merged-head layout.
+
+Validated on CPU in interpret mode against ``kernels.ref`` (the
+real-hardware path is identical modulo ``interpret=``).
 """
 from __future__ import annotations
 
@@ -26,6 +51,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
@@ -50,7 +79,11 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
 
     m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
+    # re-mask after the exp: when every slot in the block is invalid,
+    # m_new == NEG_INF and exp(s - m_new) == 1 for the masked lanes — the
+    # kv_valid == 0 garbage path.  Zeroing p keeps (l, acc) an empty sum,
+    # so fully-masked rows finalize to a defined zero output.
+    p = jnp.where(k_pos < kv_valid, jnp.exp(s - m_new), 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
     acc_scr[...] = corr * acc_scr[...] + p @ v
@@ -68,12 +101,16 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     """q: (B, H, D); k/v: (B, S, H, D); kv_valid: (B,) valid slot counts.
 
     Returns (B, H, D).  The cache axis is padded to a ``block_k`` multiple
-    internally; padded slots are masked by the valid-count check.
+    internally; padded slots are masked by the valid-count check.  Rows with
+    ``kv_valid[b] == 0`` get an all-zero output row (defined, not NaN/garbage).
     ``interpret=True`` executes on CPU for validation; on a real TPU pass
     ``interpret=False``.
     """
     B, S, H, D = k.shape
-    block_k = min(block_k, max(S, 8))
+    # clamp the block to the cache length *rounded up to the 8-sublane f32
+    # tile* — min(block_k, S) alone would yield unaligned blocks for
+    # S % 8 != 0 and an oversized block (block_k > S) for S < 8
+    block_k = min(block_k, _round_up(max(S, 1), 8))
     pad_k = (-S) % block_k
     if pad_k:
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
@@ -108,3 +145,180 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     )(kv_valid.astype(jnp.int32), qt, kt, vt)
 
     return out[:, :, 0, :]
+
+
+# ===========================================================================
+# Fused decode STEP: append + all-layer latent query + masked Gumbel sampling
+# ===========================================================================
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _step_kernel(len_ref, slot_ref, temp_ref, x_ref, kc_ref, vc_ref,
+                 gum_ref, mask_ref,
+                 ln1s_ref, ln1b_ref, qw_ref, qb_ref, kvw_ref, kvb_ref,
+                 pw_ref, pb_ref, ln2s_ref, ln2b_ref, f1w_ref, f1b_ref,
+                 f2w_ref, f2b_ref, lnfs_ref, lnfb_ref, q0_ref,
+                 wout_ref, bout_ref,
+                 act_ref, lp_ref, y_ref, kco_ref, vco_ref, *,
+                 num_layers: int, num_heads: int):
+    D = x_ref.shape[-1]
+    C = kc_ref.shape[-2]
+    hd = D // num_heads
+    sm_scale = 1.0 / (hd ** 0.5)
+
+    x = x_ref[...].astype(jnp.float32)                       # (1, D)
+    slot = slot_ref[0]
+    kv_valid = len_ref[0] + 1                                # + BOS slot
+
+    # --- 1. append: all layers' K/V of the new token at `slot` -----------
+    kco_ref[...] = kc_ref[...]
+    vco_ref[...] = vc_ref[...]
+    for l in range(num_layers):
+        kv = x @ kvw_ref[l].astype(jnp.float32) \
+            + kvb_ref[l].astype(jnp.float32)[None]           # (1, 2D)
+        idx = (pl.dslice(l, 1), pl.dslice(0, 1), pl.dslice(slot, 1),
+               pl.dslice(0, D))
+        pl.store(kco_ref, idx,
+                 kv[None, None, :, :D].astype(kco_ref.dtype))
+        pl.store(vco_ref, idx,
+                 kv[None, None, :, D:].astype(vco_ref.dtype))
+
+    # --- 2. latent query through the layer stack -------------------------
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+    live = pos < kv_valid                                    # (1, C)
+    h = q0_ref[...].astype(jnp.float32)                      # (1, D)
+    for l in range(num_layers):
+        g = _layernorm(h, ln1s_ref[l].astype(jnp.float32),
+                       ln1b_ref[l].astype(jnp.float32))
+        q = g @ qw_ref[l].astype(jnp.float32) \
+            + qb_ref[l].astype(jnp.float32)[None]            # (1, D)
+        kl = kco_ref[l, 0].astype(jnp.float32)               # (C, D)
+        vl = vco_ref[l, 0].astype(jnp.float32)
+        outs = []
+        for hh in range(num_heads):
+            cols = slice(hh * hd, (hh + 1) * hd)
+            s = (q[:, cols] @ kl[:, cols].T) * sm_scale      # (1, C)
+            s = jnp.where(live, s, NEG_INF)
+            m = jnp.max(s, axis=-1, keepdims=True)
+            p = jnp.where(live, jnp.exp(s - m), 0.0)
+            outs.append((p @ vl[:, cols])
+                        / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True),
+                                      1e-30))
+        o = jnp.concatenate(outs, axis=1)                    # (1, D)
+        h = h + o @ pw_ref[l].astype(jnp.float32) \
+            + pb_ref[l].astype(jnp.float32)[None]
+        g2 = _layernorm(h, ln2s_ref[l].astype(jnp.float32),
+                        ln2b_ref[l].astype(jnp.float32))
+        ff = jax.nn.gelu(g2 @ f1w_ref[l].astype(jnp.float32)
+                         + f1b_ref[l].astype(jnp.float32)[None])
+        h = h + ff @ f2w_ref[l].astype(jnp.float32) \
+            + f2b_ref[l].astype(jnp.float32)[None]
+    y = _layernorm(h, lnfs_ref[...].astype(jnp.float32),
+                   lnfb_ref[...].astype(jnp.float32))
+    y_ref[...] = y.astype(y_ref.dtype)
+
+    # --- 3. readout + masked log-softmax + Gumbel-max sample -------------
+    logits = (y @ wout_ref[...].astype(jnp.float32)
+              + bout_ref[...].astype(jnp.float32)) * temp_ref[0]  # (1, A)
+    neg = jnp.finfo(jnp.float32).min
+    ml = jnp.where(mask_ref[...] != 0, logits, neg)
+    m = jnp.max(ml, axis=-1, keepdims=True)
+    lse = m + jnp.log(jnp.sum(jnp.exp(ml - m), axis=-1, keepdims=True))
+    logp = ml - lse
+    a = jnp.argmax(logp + gum_ref[...].astype(jnp.float32),
+                   axis=-1)[0].astype(jnp.int32)
+    act_ref[0, 0] = a
+    aidx = jax.lax.broadcasted_iota(jnp.int32, logp.shape, 1)
+    lp_ref[0, 0] = jnp.sum(jnp.where(aidx == a, logp, 0.0))
+
+
+def decode_step_pallas(w, x_new: jax.Array, k_cache: jax.Array,
+                       v_cache: jax.Array, lengths: jax.Array,
+                       slot: jax.Array, gumbel: jax.Array,
+                       action_mask: jax.Array, w_out: jax.Array,
+                       b_out: jax.Array,
+                       logit_temp: jax.Array = None, *, num_heads: int,
+                       interpret: bool = True):
+    """One fused cached-rollout step per environment (see module docstring).
+
+    w:           stacked decoder weights (``nn.transformer
+                 .decoder_stacked_weights``), merged-head (…, D) layout;
+    x_new:       (B, D) new-token embedding;
+    k/v_cache:   (num_layers, B, C, D) stacked cache, heads merged;
+    lengths:     (B,) live token counts (kv_valid = lengths + 1 incl. BOS);
+    slot:        (B,) per-row write slots;
+    gumbel:      (B, A) Gumbel noise from the categorical-sampling key;
+    action_mask: (B, A) nonzero = legal action;
+    w_out/b_out: (D, A)/(A,) forward-logits readout slice;
+    logit_temp:  optional (B,) per-row logit scale applied before the mask
+                 (the serve tier's tempered lanes; None = 1).
+
+    Returns ``(action (B,) i32, log_pf (B,) f32, y (B, D), new_k, new_v)``.
+    """
+    L, B, C, D = k_cache.shape
+    A = action_mask.shape[-1]
+    F = w["ff1_w"].shape[-1]
+    if logit_temp is None:
+        logit_temp = jnp.ones((B,), jnp.float32)
+
+    def fixed(shape):  # broadcast operand: same block for every program
+        nd = len(shape)
+        return pl.BlockSpec(shape, lambda b, _n=nd: (0,) * _n)
+
+    kernel = functools.partial(_step_kernel, num_layers=L,
+                               num_heads=num_heads)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (b,)),                # lengths
+            pl.BlockSpec((1,), lambda b: (b,)),                # slot
+            pl.BlockSpec((1,), lambda b: (b,)),                # logit_temp
+            pl.BlockSpec((1, D), lambda b: (b, 0)),            # x_new
+            pl.BlockSpec((L, 1, C, D), lambda b: (0, b, 0, 0)),
+            pl.BlockSpec((L, 1, C, D), lambda b: (0, b, 0, 0)),
+            pl.BlockSpec((1, A), lambda b: (b, 0)),            # gumbel
+            pl.BlockSpec((1, A), lambda b: (b, 0)),            # mask
+            fixed((L, D)), fixed((L, D)),                      # ln1
+            fixed((L, D, D)), fixed((L, D)),                   # q
+            fixed((L, D, 2 * D)), fixed((L, 2 * D)),           # kv
+            fixed((L, D, D)), fixed((L, D)),                   # proj
+            fixed((L, D)), fixed((L, D)),                      # ln2
+            fixed((L, D, F)), fixed((L, F)),                   # ff1
+            fixed((L, F, D)), fixed((L, D)),                   # ff2
+            fixed((1, D)), fixed((1, D)),                      # ln_f
+            fixed((1, D)),                                     # q0
+            fixed((D, A)), fixed((1, A)),                      # readout
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, D), lambda b: (b, 0)),
+            pl.BlockSpec((L, 1, C, D), lambda b: (0, b, 0, 0)),
+            pl.BlockSpec((L, 1, C, D), lambda b: (0, b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, D), x_new.dtype),
+            jax.ShapeDtypeStruct(k_cache.shape, k_cache.dtype),
+            jax.ShapeDtypeStruct(v_cache.shape, v_cache.dtype),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), slot.astype(jnp.int32),
+      logit_temp.astype(jnp.float32), x_new,
+      k_cache, v_cache, gumbel,
+      (action_mask != 0).astype(jnp.int32),
+      w["ln1_scale"], w["ln1_bias"], w["q_w"], w["q_b"],
+      w["kv_w"], w["kv_b"], w["proj_w"], w["proj_b"],
+      w["ln2_scale"], w["ln2_bias"], w["ff1_w"], w["ff1_b"],
+      w["ff2_w"], w["ff2_b"],
+      w["ln_f_scale"].reshape(1, D), w["ln_f_bias"].reshape(1, D),
+      w["q0"].reshape(1, D), w_out, b_out.reshape(1, A))
+
+    action, log_pf, y, new_k, new_v = out
+    return action[:, 0], log_pf[:, 0], y, new_k, new_v

@@ -44,7 +44,8 @@ def ref_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
     q: (B, H, D) one query per sequence; k/v: (B, S, H, D) cache slots;
     kv_valid: (B,) number of valid leading slots (mask = slot < kv_valid).
-    Returns (B, H, D).  This is the oracle for
+    Returns (B, H, D); rows with ``kv_valid == 0`` are all-zero (an empty
+    attention sum, not a uniform average).  This is the oracle for
     ``kernels.decode_attention.decode_attention_pallas``.
     """
     B, S, H, D = k.shape
@@ -52,7 +53,7 @@ def ref_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                         k.astype(jnp.float32)) / jnp.sqrt(D)
     mask = jnp.arange(S)[None, :] < kv_valid[:, None]          # (B, S)
     logits = jnp.where(mask[:, None, :], logits, -1e30)
-    a = jax.nn.softmax(logits, axis=-1)
+    a = jnp.where(mask[:, None, :], jax.nn.softmax(logits, axis=-1), 0.0)
     out = jnp.einsum('bhs,bshd->bhd', a, v.astype(jnp.float32))
     return out.astype(q.dtype)
 
@@ -101,3 +102,94 @@ def ref_subtb(phi: jax.Array, length: jax.Array, lam: float) -> jax.Array:
     num = jnp.sum(w * jnp.square(resid), axis=(1, 2))
     den = jnp.maximum(jnp.sum(w, axis=(1, 2)), 1e-9)
     return num / den
+
+
+def _ref_layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                   eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def ref_decode_step(w, x_new: jax.Array, k_cache: jax.Array,
+                    v_cache: jax.Array, lengths: jax.Array, slot: jax.Array,
+                    gumbel: jax.Array, action_mask: jax.Array,
+                    w_out: jax.Array, b_out: jax.Array,
+                    logit_temp: Optional[jax.Array] = None, *,
+                    num_heads: int):
+    """Oracle for ``decode_attention.decode_step_pallas`` — one fused
+    cached-rollout step: cache append + latent-query decode + masked
+    Gumbel-max sampling, all in plain batched jnp.
+
+    w: stacked decoder weights (``nn.transformer.decoder_stacked_weights``);
+    x_new: (B, D); k/v_cache: (num_layers, B, C, D) merged-head layout;
+    lengths/slot: (B,) int; gumbel/action_mask: (B, A);
+    w_out/b_out: (D, A)/(A,) forward-logits readout slice;
+    logit_temp: optional (B,) logit scale (None = 1).
+    Returns (action (B,) i32, log_pf (B,) f32, y (B, D), new_k, new_v).
+    """
+    L, B, C, D = k_cache.shape
+    hd = D // num_heads
+    f32 = jnp.float32
+    x = x_new.astype(f32)
+
+    kv = jnp.einsum('bd,lde->lbe', x, w["kv_w"].astype(f32)) \
+        + w["kv_b"].astype(f32)[:, None]                    # (L, B, 2D)
+    rows = jnp.arange(B)
+    slot = jnp.broadcast_to(slot, (B,))
+    new_k = k_cache.at[:, rows, slot].set(kv[..., :D].astype(k_cache.dtype))
+    new_v = v_cache.at[:, rows, slot].set(kv[..., D:].astype(v_cache.dtype))
+
+    live = jnp.arange(C)[None, :] < (lengths[:, None] + 1)  # (B, C)
+    h = jnp.broadcast_to(w["q0"].astype(f32)[None], (B, D))
+    for l in range(L):
+        g = _ref_layernorm(h, w["ln1_scale"][l].astype(f32),
+                           w["ln1_bias"][l].astype(f32))
+        q = g @ w["q_w"][l].astype(f32) + w["q_b"][l].astype(f32)
+        qh = q.reshape(B, num_heads, hd)
+        kl = new_k[l].astype(f32).reshape(B, C, num_heads, hd)
+        vl = new_v[l].astype(f32).reshape(B, C, num_heads, hd)
+        s = jnp.einsum('bhd,bshd->bhs', qh, kl) / jnp.sqrt(hd).astype(f32)
+        s = jnp.where(live[:, None, :], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum('bhs,bshd->bhd', a, vl).reshape(B, D)
+        h = h + o @ w["proj_w"][l].astype(f32) + w["proj_b"][l].astype(f32)
+        g2 = _ref_layernorm(h, w["ln2_scale"][l].astype(f32),
+                            w["ln2_bias"][l].astype(f32))
+        ff = jax.nn.gelu(g2 @ w["ff1_w"][l].astype(f32)
+                         + w["ff1_b"][l].astype(f32))
+        h = h + ff @ w["ff2_w"][l].astype(f32) + w["ff2_b"][l].astype(f32)
+    y = _ref_layernorm(h, w["ln_f_scale"].astype(f32),
+                       w["ln_f_bias"].astype(f32))
+
+    logits = y @ w_out.astype(f32) + b_out.astype(f32)
+    if logit_temp is not None:
+        logits = logits * logit_temp.astype(f32)[:, None]
+    neg = jnp.finfo(f32).min
+    ml = jnp.where(action_mask != 0, logits, neg)
+    logp = ml - jax.scipy.special.logsumexp(ml, axis=-1, keepdims=True)
+    action = jnp.argmax(logp + gumbel.astype(f32), axis=-1).astype(jnp.int32)
+    log_pf = jnp.take_along_axis(logp, action[:, None].astype(jnp.int32),
+                                 axis=-1)[:, 0]
+    return action, log_pf, y.astype(x_new.dtype), new_k, new_v
+
+
+def ref_traj_logprob(logits: jax.Array, actions: jax.Array,
+                     mask: jax.Array, valid: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Per-trajectory log-probability accumulation (TB/DB numerator terms).
+
+    logits: (B, T, A) per-step action logits; actions: (B, T) taken actions;
+    mask: (B, T, A) nonzero = legal; valid: (B, T) nonzero = live transition.
+    Returns ``(total (B,), per_step (B, T))`` where
+    ``per_step[b, t] = valid * log softmax(masked logits)[action]`` and
+    ``total = per_step.sum(-1)`` (TB consumes the total, DB the per-step
+    terms).  Oracle for ``kernels.traj_logprob.traj_logprob_pallas``.
+    """
+    neg = jnp.finfo(jnp.float32).min
+    ml = jnp.where(mask != 0, logits.astype(jnp.float32), neg)
+    logp = ml - jax.scipy.special.logsumexp(ml, axis=-1, keepdims=True)
+    lpa = jnp.take_along_axis(
+        logp, actions[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    per_step = jnp.where(valid != 0, lpa, 0.0)
+    return jnp.sum(per_step, axis=-1), per_step

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for in-kernel TB/DB log-probability accumulation.
+
+The TB and DB objectives both reduce per-step action log-probabilities over
+a trajectory: ``sum_t valid_t * log softmax(masked logits_t)[action_t]``.
+The jnp path materializes the full (T, B, A) log-softmax tensor and gathers
+from it; this kernel fuses mask + log-softmax + gather + the trajectory
+reduction into one pass per environment, so the (T, A) logits tile is read
+once and only a scalar per trajectory leaves the program:
+
+  grid = (B, n_t_blocks) with the time axis innermost *sequential*; each
+  program streams (block_t x A) logits/mask tiles while the running sum
+  lives in VMEM scratch.  The action gather is an iota-match (no dynamic
+  indexing), masked slots sit at float32 min before the stable logsumexp —
+  matching ``core.types.masked_logprobs`` — and steps with ``valid == 0``
+  contribute exactly zero.
+
+``kernels.ops.traj_logprob`` wraps this with a custom VJP (softmax-minus-
+one-hot closed form) so the TB/DB training path can lower through it on
+TPU; ``kernels.ref.ref_traj_logprob`` is the interpret-mode oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _tl_kernel(logits_ref, act_ref, mask_ref, valid_ref, out_ref, step_ref,
+               acc_scr, *, block_t: int, n_t: int):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = logits_ref[0].astype(jnp.float32)                   # (block_t, A)
+    neg = jnp.finfo(jnp.float32).min
+    ml = jnp.where(mask_ref[0] != 0, x, neg)
+    m = jnp.max(ml, axis=-1, keepdims=True)
+    lse = m + jnp.log(jnp.sum(jnp.exp(ml - m), axis=-1, keepdims=True))
+    aidx = jax.lax.broadcasted_iota(jnp.int32, ml.shape, 1)
+    hit = aidx == act_ref[0][:, None]
+    lpa = jnp.sum(jnp.where(hit, ml - lse, 0.0), axis=-1)   # (block_t,)
+    live = valid_ref[0] != 0                                # time padding too
+    lpa = jnp.where(live, lpa, 0.0)
+    step_ref[0] = lpa
+    acc_scr[0, 0] += jnp.sum(lpa)
+
+    @pl.when(it == n_t - 1)
+    def _finalize():
+        out_ref[0, 0] = acc_scr[0, 0]
+
+
+def traj_logprob_pallas(logits: jax.Array, actions: jax.Array,
+                        mask: jax.Array, valid: jax.Array, *,
+                        block_t: int = 128, interpret: bool = True):
+    """logits: (B, T, A); actions: (B, T) int; mask: (B, T, A) nonzero=legal;
+    valid: (B, T) nonzero=live.  Returns ``(total (B,), per_step (B, T))``
+    — the accumulated log-prob (TB) and the fused per-transition gathered
+    log-probs (DB), zero where ``valid == 0``.
+
+    The time axis is padded to a ``block_t`` multiple internally; padded
+    steps carry ``valid == 0`` and contribute nothing.
+    """
+    B, T, A = logits.shape
+    block_t = min(block_t, _round_up(max(T, 1), 8))
+    pad_t = (-T) % block_t
+    actions = actions.astype(jnp.int32)
+    maski = (mask != 0).astype(jnp.int32)
+    validi = (valid != 0).astype(jnp.int32)
+    if pad_t:
+        logits = jnp.pad(logits, ((0, 0), (0, pad_t), (0, 0)))
+        actions = jnp.pad(actions, ((0, 0), (0, pad_t)))
+        maski = jnp.pad(maski, ((0, 0), (0, pad_t), (0, 0)),
+                        constant_values=1)  # keep the lse finite
+        validi = jnp.pad(validi, ((0, 0), (0, pad_t)))
+    n_t = logits.shape[1] // block_t
+
+    kernel = functools.partial(_tl_kernel, block_t=block_t, n_t=n_t)
+    total, per_step = pl.pallas_call(
+        kernel,
+        grid=(B, n_t),
+        in_specs=[
+            pl.BlockSpec((1, block_t, A), lambda b, it: (b, it, 0)),
+            pl.BlockSpec((1, block_t), lambda b, it: (b, it)),
+            pl.BlockSpec((1, block_t, A), lambda b, it: (b, it, 0)),
+            pl.BlockSpec((1, block_t), lambda b, it: (b, it)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b, it: (b, 0)),
+            pl.BlockSpec((1, block_t), lambda b, it: (b, it)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, logits.shape[1]), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(logits, actions, maski, validi)
+    return total[:, 0], per_step[:, :T]

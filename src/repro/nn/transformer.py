@@ -97,6 +97,15 @@ def positional_embedding_init(key: jax.Array, max_len: int, dim: int,
 # Layout: cache slot 0 holds a learned BOS entry (so the empty state still
 # has something to attend to); the token appended at generation step i lands
 # in slot i+1.  Queries mask slots > current length.
+#
+# Cache layout: ONE stacked pair ``{"k", "v"}`` shaped
+# (num_layers, B, capacity, H, hd) — not a per-layer dict.  Stacking is what
+# makes the per-step append *fused*: all layers' K (and V) land in a single
+# ``dynamic_update_slice`` (lockstep scalar slot) or a single per-row
+# scatter (the serving engine's vector slot), instead of 2 x num_layers
+# small updates chained through the rollout scan carry.  The fused Pallas
+# decode-step kernel (``kernels/decode_attention.decode_step_pallas``)
+# consumes the same layout directly.
 
 
 def decode_encoder_init(key: jax.Array, *, num_layers: int, dim: int,
@@ -136,6 +145,15 @@ def _kv_heads(lp: Params, x: jax.Array, num_heads: int):
     return kv[..., 0, :, :], kv[..., 1, :, :]
 
 
+def _kv_heads_stacked(p: Params, x: jax.Array, num_heads: int):
+    """All layers' K/V of token embeddings x (..., D) -> two stacked
+    (num_layers, ..., H, hd) arrays (one pair of values per layer, computed
+    with that layer's projection)."""
+    ks, vs = zip(*(_kv_heads(p[f"layer_{i}"], x, num_heads)
+                   for i in range(_num_layers(p))))
+    return jnp.stack(ks), jnp.stack(vs)
+
+
 def _single_query_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                             valid: jax.Array) -> jax.Array:
     """q: (B, H, hd); k/v: (B, S, H, hd); valid: (B, S) bool.  Shared by the
@@ -149,21 +167,17 @@ def _single_query_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def cache_init(p: Params, x0: jax.Array, capacity: int, *,
                num_heads: int) -> Params:
-    """Preallocated per-layer K/V cache seeded with the BOS entry at slot 0.
+    """Preallocated stacked K/V cache seeded with the BOS entry at slot 0.
 
-    x0: (B, D) BOS embedding; returns ``{"layer_i": {"k","v"}}`` with k/v
-    shaped (B, capacity, H, hd).
+    x0: (B, D) BOS embedding; returns ``{"k", "v"}`` with both arrays
+    shaped (num_layers, B, capacity, H, hd).
     """
     B, D = x0.shape
     hd = D // num_heads
-    cache: Params = {}
-    for i in range(_num_layers(p)):
-        k0, v0 = _kv_heads(p[f"layer_{i}"], x0, num_heads)  # (B, H, hd)
-        k = jnp.zeros((B, capacity, num_heads, hd), x0.dtype)
-        v = jnp.zeros((B, capacity, num_heads, hd), x0.dtype)
-        cache[f"layer_{i}"] = {"k": k.at[:, 0].set(k0),
-                               "v": v.at[:, 0].set(v0)}
-    return cache
+    k0, v0 = _kv_heads_stacked(p, x0, num_heads)        # (Lyr, B, H, hd)
+    zeros = jnp.zeros((_num_layers(p), B, capacity, num_heads, hd),
+                      x0.dtype)
+    return {"k": zeros.at[:, :, 0].set(k0), "v": zeros.at[:, :, 0].set(v0)}
 
 
 def cache_fill(p: Params, cache: Params, xs: jax.Array, *,
@@ -171,23 +185,20 @@ def cache_fill(p: Params, cache: Params, xs: jax.Array, *,
     """Bulk-write token embeddings xs (B, S, D) into slots 1..S in one batched
     pass (token i -> slot i+1) — used by pop-only backward rollouts, which
     build the cache from the terminal sequence once and then only query."""
-    out: Params = {}
     S = xs.shape[1]
-    for i in range(_num_layers(p)):
-        lc = cache[f"layer_{i}"]
-        kn, vn = _kv_heads(p[f"layer_{i}"], xs, num_heads)  # (B, S, H, hd)
-        out[f"layer_{i}"] = {"k": lc["k"].at[:, 1:S + 1].set(kn),
-                             "v": lc["v"].at[:, 1:S + 1].set(vn)}
-    return out
+    kn, vn = _kv_heads_stacked(p, xs, num_heads)        # (Lyr, B, S, H, hd)
+    return {"k": cache["k"].at[:, :, 1:S + 1].set(kn),
+            "v": cache["v"].at[:, :, 1:S + 1].set(vn)}
 
 
 def cache_append(p: Params, cache: Params, x_new: jax.Array,
                  slot: jax.Array, *, num_heads: int) -> Params:
-    """Write one token's K/V per layer at ``slot``.
+    """Write one token's K/V for every layer at ``slot`` — one fused update
+    per cache tensor, not one per layer.
 
     ``slot`` is either a traced *scalar* index shared by the whole batch (a
     cheap ``dynamic_update_slice``, no per-env scatter) or a (B,) *vector*
-    of per-row slots (a ``.at[arange(B), slot]`` scatter — the serving
+    of per-row slots (a ``.at[:, arange(B), slot]`` scatter — the serving
     engine's continuous-batching path, where each lane sits at its own
     trajectory step).  Per-row writes land the same values at the same
     (row, slot) locations a scalar write would for that row, so a lane's
@@ -198,25 +209,16 @@ def cache_append(p: Params, cache: Params, x_new: jax.Array,
     envs whose step t-1 added nothing (stopped / terminal) get a garbage
     entry at a slot their ``length`` mask never reaches, and envs at max
     length re-write their newest token's slot with identical values."""
-    out: Params = {}
-    per_row = jnp.ndim(slot) == 1
-    if per_row:
+    kn, vn = _kv_heads_stacked(p, x_new, num_heads)     # (Lyr, B, H, hd)
+    if jnp.ndim(slot) == 1:
         rows = jnp.arange(slot.shape[0])
-    for i in range(_num_layers(p)):
-        lc = cache[f"layer_{i}"]
-        kn, vn = _kv_heads(p[f"layer_{i}"], x_new, num_heads)  # (B, H, hd)
-        if per_row:
-            out[f"layer_{i}"] = {"k": lc["k"].at[rows, slot].set(kn),
-                                 "v": lc["v"].at[rows, slot].set(vn)}
-        else:
-            start = (0, slot, 0, 0)
-            out[f"layer_{i}"] = {
-                "k": jax.lax.dynamic_update_slice(lc["k"], kn[:, None],
-                                                  start),
-                "v": jax.lax.dynamic_update_slice(lc["v"], vn[:, None],
-                                                  start),
-            }
-    return out
+        return {"k": cache["k"].at[:, rows, slot].set(kn),
+                "v": cache["v"].at[:, rows, slot].set(vn)}
+    start = (0, 0, slot, 0, 0)
+    return {"k": jax.lax.dynamic_update_slice(cache["k"], kn[:, :, None],
+                                              start),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vn[:, :, None],
+                                              start)}
 
 
 def _decode_query(p: Params, num_heads: int, kv_of_layer, attend,
@@ -247,9 +249,9 @@ def encoder_query_cached(p: Params, cache: Params, lengths: jax.Array, *,
     an interpret-mode kernel on the rollout hot path would be far slower
     than the jnp fallback).
     """
-    k0 = cache["layer_0"]["k"]
-    B, C = k0.shape[0], k0.shape[1]
-    dim = k0.shape[2] * k0.shape[3]
+    ks = cache["k"]
+    B, C = ks.shape[1], ks.shape[2]
+    dim = ks.shape[3] * ks.shape[4]
     if attn_impl == "auto":
         from ..kernels.ops import pallas_compiled
         attn_impl = "kernel" if (jax.default_backend() == "tpu"
@@ -263,7 +265,7 @@ def encoder_query_cached(p: Params, cache: Params, lengths: jax.Array, *,
         attend = lambda q, k, v: _single_query_attention(q, k, v, valid)
     return _decode_query(
         p, num_heads,
-        lambda i: (cache[f"layer_{i}"]["k"], cache[f"layer_{i}"]["v"]),
+        lambda i: (cache["k"][i], cache["v"][i]),
         attend, B, dim)
 
 
@@ -282,6 +284,58 @@ def encoder_apply_cached(p: Params, x_new: jax.Array, cache: Params,
     y = encoder_query_cached(p, cache, lengths, num_heads=num_heads,
                              attn_impl=attn_impl)
     return y, cache
+
+
+def encoder_step_cached(p: Params, x_new: jax.Array, cache: Params,
+                        lengths: jax.Array, slot: jax.Array, *,
+                        num_heads: int, attn_impl: str = "auto"):
+    """Fused decode step: append + query as ONE entry point, so callers
+    (rollout scan body, serve lane step) issue a single op instead of the
+    append -> query chain.  ``slot`` is a traced scalar (lockstep rollouts)
+    or a (B,) vector (serve lanes).  Returns ``(y (B, D), new_cache)``.
+
+    On the jnp path this is exactly ``cache_append`` + ``encoder_query_cached``
+    (bitwise parity with the unfused chain); when the Pallas kernels compile
+    (TPU + ``REPRO_PALLAS_COMPILE=1``) the attention itself lowers through
+    the decode-attention kernel, and the fully-fused sampling variant lives
+    one level up in ``core.policies`` (which also folds in masked sampling
+    via ``kernels.ops.decode_step``).
+    """
+    cache = cache_append(p, cache, x_new, slot, num_heads=num_heads)
+    y = encoder_query_cached(p, cache, lengths, num_heads=num_heads,
+                             attn_impl=attn_impl)
+    return y, cache
+
+
+def decoder_stacked_weights(p: Params) -> Params:
+    """Stack the per-layer decoder weight dicts into (num_layers, ...) arrays
+    for the fused Pallas decode-step kernel (which loops layers statically
+    over a single stacked ref instead of taking 7 x num_layers operands).
+    Trace-time only — checkpoints keep the per-layer dict layout."""
+    L = _num_layers(p)
+
+    def stack(path_fn):
+        return jnp.stack([path_fn(p[f"layer_{i}"]) for i in range(L)])
+
+    return {
+        "ln1_scale": stack(lambda lp: lp["ln1"]["scale"]),
+        "ln1_bias": stack(lambda lp: lp["ln1"]["bias"]),
+        "q_w": stack(lambda lp: lp["q"]["w"]),
+        "q_b": stack(lambda lp: lp["q"]["b"]),
+        "kv_w": stack(lambda lp: lp["kv"]["w"]),
+        "kv_b": stack(lambda lp: lp["kv"]["b"]),
+        "proj_w": stack(lambda lp: lp["proj"]["w"]),
+        "proj_b": stack(lambda lp: lp["proj"]["b"]),
+        "ln2_scale": stack(lambda lp: lp["ln2"]["scale"]),
+        "ln2_bias": stack(lambda lp: lp["ln2"]["bias"]),
+        "ff1_w": stack(lambda lp: lp["ff1"]["w"]),
+        "ff1_b": stack(lambda lp: lp["ff1"]["b"]),
+        "ff2_w": stack(lambda lp: lp["ff2"]["w"]),
+        "ff2_b": stack(lambda lp: lp["ff2"]["b"]),
+        "ln_f_scale": p["ln_f"]["scale"],
+        "ln_f_bias": p["ln_f"]["bias"],
+        "q0": p["q0"],
+    }
 
 
 def encoder_apply_bank(p: Params, xs: jax.Array, mask: jax.Array, *,

@@ -154,26 +154,36 @@ class SamplingEngine:
             fmask = env_w.forward_mask(state, ep)
             was_done = env_w.is_terminal(state, ep)
             live = jnp.logical_and(active, jnp.logical_not(was_done))
-            if self.cached:
-                token, pos, length = env_w.observe_last(state, ep,
-                                                        lane.prev_action)
-                out, cache = policy.apply_cached(policy_params, lane.cache,
-                                                 token, pos, length,
-                                                 step=lane.t)
-            else:
-                out = apply_fn(policy_params, env_w.observe(state, ep))
-                cache = lane.cache
             # per-lane step key: the same fold_in(step_keys[t], env_id)
             # chain forward_rollout derives for its whole batch up front
             t_idx = jnp.clip(lane.t, 0, T - 1)
             key_t = jnp.take_along_axis(
                 lane.step_keys, t_idx[:, None, None], axis=1)[:, 0]
             env_keys = jax.vmap(jax.random.fold_in)(key_t, lane.env_id)
-            logits = out["logits"] * lane.logit_temp[:, None]
             safe_mask = jnp.where(live[:, None], fmask,
                                   jnp.ones_like(fmask))
-            actions, _ = sample_masked_per_env(None, logits, safe_mask,
-                                               env_keys=env_keys)
+            if self.cached and policy.sample_cached is not None:
+                # fused per-lane step: append + query + tempered sampling
+                # as one op (per-row slot = lane.t, per-row logit_temp)
+                token, pos, length = env_w.observe_last(state, ep,
+                                                        lane.prev_action)
+                actions, _, _, cache = policy.sample_cached(
+                    policy_params, lane.cache, token, pos, length,
+                    env_keys, safe_mask, step=lane.t,
+                    logit_temp=lane.logit_temp)
+            else:
+                if self.cached:
+                    token, pos, length = env_w.observe_last(
+                        state, ep, lane.prev_action)
+                    out, cache = policy.apply_cached(
+                        policy_params, lane.cache, token, pos, length,
+                        step=lane.t)
+                else:
+                    out = apply_fn(policy_params, env_w.observe(state, ep))
+                    cache = lane.cache
+                logits = out["logits"] * lane.logit_temp[:, None]
+                actions, _ = sample_masked_per_env(None, logits, safe_mask,
+                                                   env_keys=env_keys)
             _, nstate, log_r, done, _ = env_w.step(state, actions, ep)
             # idle lanes hold their state verbatim (env.step only no-ops
             # terminal states; an idle lane may hold an initial one)
@@ -201,8 +211,12 @@ class SamplingEngine:
                 mask.reshape(mask.shape + (1,) * (a.ndim - 1)), a, b)
             env_state = jax.tree_util.tree_map(sel, state0, lane.env_state)
             if self.cached:
+                # cache leaves are stacked (num_layers, B, ...) — the lane
+                # axis is axis 1, not the leading axis env-state leaves use
                 cache0 = policy.cache_init(policy_params, L)
-                cache = jax.tree_util.tree_map(sel, cache0, lane.cache)
+                sel_row = lambda a, b: jnp.where(
+                    mask.reshape((1, L) + (1,) * (a.ndim - 2)), a, b)
+                cache = jax.tree_util.tree_map(sel_row, cache0, lane.cache)
             else:
                 cache = lane.cache
             w = lambda a, b: jnp.where(mask, a, b)

@@ -1,0 +1,361 @@
+"""Fused decode-step path: kernel parity, threading parity, and gradients.
+
+The contract under test (ISSUE 7): the fused per-step entry
+``Policy.sample_cached`` — cache append + latent-query decode + masked
+sampling issued as one op — produces *bitwise* the trajectories of the
+unfused ``apply_cached`` + ``sample_masked_per_env`` chain, everywhere it
+is threaded (forward rollout scan body, serve-engine lane step), and the
+Pallas kernels behind it (``decode_step_pallas``, ``traj_logprob_pallas``,
+``decode_attention_pallas``) match their jnp oracles in interpret mode,
+including unaligned shapes and empty-cache rows.  The training-path custom
+VJPs (``decode_attention_grad``, ``traj_logprob``) must match dense
+gradients.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policies import make_transformer_policy
+from repro.core.rollout import backward_rollout, forward_rollout
+from repro.core.types import sample_masked_per_env
+from repro.envs.bitseq import BitSeqEnvironment
+from repro.envs.sequences import AMPEnvironment, TFBind8Environment
+from repro.kernels.decode_attention import (decode_attention_pallas,
+                                            decode_step_pallas)
+from repro.kernels.ops import decode_attention_grad, decode_step, \
+    traj_logprob
+from repro.kernels.ref import (ref_decode_attention, ref_decode_step,
+                               ref_traj_logprob)
+from repro.kernels.traj_logprob import traj_logprob_pallas
+from repro.nn.transformer import decoder_stacked_weights
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _decode_policy(env, max_len, **kw):
+    kw.setdefault("num_layers", 2)
+    kw.setdefault("dim", 32)
+    kw.setdefault("num_heads", 4)
+    return make_transformer_policy(env.vocab_size, max_len, env.action_dim,
+                                   env.backward_action_dim, arch="decode",
+                                   **kw)
+
+
+def _env_cases():
+    bit = BitSeqEnvironment(n=16, k=4)
+    tfb = TFBind8Environment()
+    amp = AMPEnvironment(max_len=10)
+    return {
+        "bitseq": (bit, _decode_policy(bit, bit.L)),
+        "tfbind8": (tfb, _decode_policy(tfb, 8)),
+        "amp": (amp, _decode_policy(amp, amp.max_len, learn_backward=True)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Threading parity: fused sample_cached vs. the unfused chain
+# ---------------------------------------------------------------------------
+
+class TestFusedRolloutParity:
+    @pytest.mark.parametrize("name", sorted(_env_cases()))
+    def test_forward_bitwise(self, name):
+        """sample_cached is the scan-body entry; clearing it falls back to
+        the unfused apply_cached + sample chain — both cached rollouts must
+        agree bitwise (same key stream, same masked-categorical draw)."""
+        env, pol = _env_cases()[name]
+        ep = env.init(KEY)
+        pp = pol.init(KEY)
+        unfused_pol = pol._replace(sample_cached=None)
+        fused = forward_rollout(KEY, env, ep, pol, pp, 8, use_cache=True)
+        unfused = forward_rollout(KEY, env, ep, unfused_pol, pp, 8,
+                                  use_cache=True)
+        for field in ("obs", "fwd_mask", "bwd_mask", "actions",
+                      "bwd_actions", "valid", "done", "log_reward",
+                      "log_pf_beh"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(fused, field)),
+                np.asarray(getattr(unfused, field)), err_msg=field)
+
+    @pytest.mark.parametrize("name", sorted(_env_cases()))
+    def test_forward_with_exploration(self, name):
+        """Nonzero eps keeps the jnp branch (the kernel gate requires
+        statically-zero eps) — parity must hold there too."""
+        env, pol = _env_cases()[name]
+        ep = env.init(KEY)
+        pp = pol.init(KEY)
+        unfused_pol = pol._replace(sample_cached=None)
+        fused = forward_rollout(KEY, env, ep, pol, pp, 6, use_cache=True,
+                                exploration_eps=0.25)
+        unfused = forward_rollout(KEY, env, ep, unfused_pol, pp, 6,
+                                  use_cache=True, exploration_eps=0.25)
+        np.testing.assert_array_equal(np.asarray(fused.actions),
+                                      np.asarray(unfused.actions))
+        np.testing.assert_array_equal(np.asarray(fused.log_pf_beh),
+                                      np.asarray(unfused.log_pf_beh))
+
+    @pytest.mark.parametrize("name", ["tfbind8", "amp"])
+    def test_pop_only_backward_bitwise(self, name):
+        """The pop-only backward replay (cache_fill + query_cached) is
+        shared by both policies; fused-forward policies must not perturb
+        it."""
+        env, pol = _env_cases()[name]
+        ep = env.init(KEY)
+        pp = pol.init(KEY)
+        batch = forward_rollout(KEY, env, ep, pol, pp, 6)
+        term = batch.obs[-1]
+        if name == "amp":
+            ts = env.terminal_state_from_tokens(
+                term, jnp.sum(term != env.pad, axis=-1))
+        else:
+            ts = env.terminal_state_from_tokens(term)
+        r_f = backward_rollout(KEY, env, ep, pol, pp, ts, collect=True,
+                               use_cache=True)
+        r_u = backward_rollout(KEY, env, ep,
+                               pol._replace(sample_cached=None), pp, ts,
+                               collect=True, use_cache=True)
+        np.testing.assert_array_equal(np.asarray(r_f.batch.actions),
+                                      np.asarray(r_u.batch.actions))
+        np.testing.assert_array_equal(np.asarray(r_f.log_pf),
+                                      np.asarray(r_u.log_pf))
+        np.testing.assert_array_equal(np.asarray(r_f.log_pb),
+                                      np.asarray(r_u.log_pb))
+
+
+class TestFusedServeParity:
+    def _engine(self, env, ep, pol, pp, **kw):
+        from repro.serve import SamplingEngine
+        return SamplingEngine(env, ep, pol, pp, num_lanes=3, **kw)
+
+    def test_engine_refill_bitwise(self):
+        """7 samples through 3 lanes (several refill waves, per-row
+        vector-slot appends): the fused lane step must match both the
+        unfused engine and the forward_rollout reference bitwise."""
+        env, pol = _env_cases()["bitseq"]
+        ep = env.init(KEY)
+        pp = pol.init(KEY)
+        key = jax.random.PRNGKey(7)
+        ref = forward_rollout(key, env, ep, pol, pp, 7)
+        results = []
+        for p in (pol, pol._replace(sample_cached=None)):
+            eng = self._engine(env, ep, p, pp)
+            rid = eng.submit(num_samples=7, key=key)
+            results.append(eng.run()[rid])
+        fused, unfused = results
+        np.testing.assert_array_equal(fused.samples, unfused.samples)
+        np.testing.assert_array_equal(fused.log_rewards,
+                                      unfused.log_rewards)
+        np.testing.assert_array_equal(fused.samples,
+                                      np.asarray(ref.obs[-1]))
+
+    def test_engine_tempered_bitwise(self):
+        """logit_temp != 1 exercises the per-row temperature operand of the
+        fused step; fused and unfused engines must still agree bitwise."""
+        env, pol = _env_cases()["bitseq"]
+        ep = env.init(KEY)
+        pp = pol.init(KEY)
+        key = jax.random.PRNGKey(13)
+        results = []
+        for p in (pol, pol._replace(sample_cached=None)):
+            eng = self._engine(env, ep, p, pp)
+            rid = eng.submit(num_samples=5, key=key, logit_temp=0.6)
+            results.append(eng.run()[rid])
+        np.testing.assert_array_equal(results[0].samples,
+                                      results[1].samples)
+        np.testing.assert_array_equal(results[0].log_rewards,
+                                      results[1].log_rewards)
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity: decode_step_pallas vs. oracle / vs. the unfused chain
+# ---------------------------------------------------------------------------
+
+def _step_inputs(key, L, B, C, D, A, dtype=jnp.float32):
+    ks = jax.random.split(key, 12)
+    nrm = lambda k, *s: jax.random.normal(k, s, dtype)
+    w = {
+        "ln1_scale": 1.0 + 0.1 * nrm(ks[0], L, D), "ln1_bias": 0.1 * nrm(ks[0], L, D),
+        "q_w": nrm(ks[1], L, D, D) * 0.3, "q_b": 0.1 * nrm(ks[1], L, D),
+        "kv_w": nrm(ks[2], L, D, 2 * D) * 0.3, "kv_b": 0.1 * nrm(ks[2], L, 2 * D),
+        "proj_w": nrm(ks[3], L, D, D) * 0.3, "proj_b": 0.1 * nrm(ks[3], L, D),
+        "ln2_scale": 1.0 + 0.1 * nrm(ks[4], L, D), "ln2_bias": 0.1 * nrm(ks[4], L, D),
+        "ff1_w": nrm(ks[5], L, D, 2 * D) * 0.3, "ff1_b": 0.1 * nrm(ks[5], L, 2 * D),
+        "ff2_w": nrm(ks[6], L, 2 * D, D) * 0.3, "ff2_b": 0.1 * nrm(ks[6], L, D),
+        "ln_f_scale": 1.0 + 0.1 * nrm(ks[7], D), "ln_f_bias": 0.1 * nrm(ks[7], D),
+        "q0": nrm(ks[8], D),
+    }
+    x_new = nrm(ks[9], B, D)
+    k_cache = nrm(ks[10], L, B, C, D)
+    v_cache = nrm(ks[10], L, B, C, D) * 0.5
+    gumbel = jax.random.gumbel(ks[11], (B, A))
+    mask = jax.random.bernoulli(ks[11], 0.7, (B, A)).at[:, 0].set(True)
+    w_out = nrm(ks[9], D, A) * 0.3
+    b_out = 0.1 * nrm(ks[9], A)
+    return w, x_new, k_cache, v_cache, gumbel, mask, w_out, b_out
+
+
+class TestDecodeStepKernel:
+    @pytest.mark.parametrize("C,num_layers", [(7, 1), (9, 2), (13, 2)])
+    def test_matches_oracle(self, C, num_layers):
+        """Unaligned cache capacities, mixed lengths (incl. 0 and C-1),
+        per-row vector slots, and a per-row temperature."""
+        L, B, D, A = num_layers, 4, 16, 5
+        w, x, kc, vc, gum, msk, wo, bo = _step_inputs(KEY, L, B, C, D, A)
+        lengths = jnp.array([0, 1, C - 2, C - 1])[:B] % C
+        slot = jnp.minimum(lengths + 1, C - 1)
+        temp = jnp.array([1.0, 0.5, 2.0, 1.0])[:B]
+        got = decode_step_pallas(w, x, kc, vc, lengths, slot, gum, msk,
+                                 wo, bo, temp, num_heads=2, interpret=True)
+        want = ref_decode_step(w, x, kc, vc, lengths, slot, gum, msk,
+                               wo, bo, temp, num_heads=2)
+        np.testing.assert_array_equal(np.asarray(got[0]),
+                                      np.asarray(want[0]))  # actions
+        for g, r, tag in zip(got[1:], want[1:],
+                             ("log_pf", "y", "new_k", "new_v")):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                       atol=1e-4, err_msg=tag)
+
+    def test_scalar_slot_matches_vector(self):
+        """Lockstep rollouts pass a scalar slot; it must behave as the
+        broadcast vector (ops.decode_step broadcasts before the kernel)."""
+        L, B, C, D, A = 2, 3, 6, 16, 4
+        w, x, kc, vc, gum, msk, wo, bo = _step_inputs(KEY, L, B, C, D, A)
+        lengths = jnp.array([2, 2, 2])
+        cache = {"k": kc.reshape(L, B, C, 2, D // 2),
+                 "v": vc.reshape(L, B, C, 2, D // 2)}
+        a_s, lp_s, y_s, c_s = decode_step(w, x, cache, lengths,
+                                          jnp.int32(3), gum, msk, wo, bo,
+                                          num_heads=2)
+        a_v, lp_v, y_v, c_v = decode_step(w, x, cache, lengths,
+                                          jnp.full((B,), 3, jnp.int32),
+                                          gum, msk, wo, bo, num_heads=2)
+        np.testing.assert_array_equal(np.asarray(a_s), np.asarray(a_v))
+        np.testing.assert_array_equal(np.asarray(y_s), np.asarray(y_v))
+        for t in ("k", "v"):
+            np.testing.assert_array_equal(np.asarray(c_s[t]),
+                                          np.asarray(c_v[t]))
+
+    def test_matches_unfused_policy_chain(self):
+        """End-to-end: the kernel branch of sample_cached (embed + stacked
+        weights + gumbel + decode_step) reproduces the unfused
+        apply_cached + sample_masked_per_env chain on real policy params —
+        action bitwise, log-probs/cache to fp32 tolerance."""
+        env = TFBind8Environment()
+        pol = _decode_policy(env, 8)
+        pp = pol.init(KEY)
+        B, A = 5, env.action_dim
+        cache = pol.cache_init(pp, B)
+        token = jax.random.randint(KEY, (B,), 0, env.vocab_size - 1)
+        pos = jnp.array([1, 2, 3, 1, 2])
+        length = jnp.array([1, 2, 3, 1, 2])
+        step = jnp.int32(4)
+        env_keys = jax.random.split(jax.random.PRNGKey(5), B)
+        mask = jnp.ones((B, A), bool)
+        # unfused chain
+        out, cache_u = pol.apply_cached(pp, cache, token, pos, length,
+                                        step=step)
+        act_u, lp_u = sample_masked_per_env(None, out["logits"], mask,
+                                            env_keys=env_keys)
+        # fused kernel branch (what sample_cached lowers to on TPU)
+        from repro.nn.core import embedding_apply
+        x_new = (embedding_apply(pp["embed"], token.astype(jnp.int32))
+                 + embedding_apply({"table": pp["pos"]["pos"]},
+                                   jnp.clip(pos, 0, 7)))
+        key_c = jax.vmap(lambda k: jax.random.split(k, 3)[1])(env_keys)
+        gumbel = jax.vmap(lambda k: jax.random.gumbel(k, (A,)))(key_c)
+        w = decoder_stacked_weights(pp["decoder"])
+        act_f, lp_f, y, cache_f = decode_step(
+            w, x_new, cache, length, step, gumbel, mask,
+            pp["readout"]["w"][:, :A], pp["readout"]["b"][:A],
+            num_heads=4)
+        np.testing.assert_array_equal(np.asarray(act_f), np.asarray(act_u))
+        np.testing.assert_allclose(np.asarray(lp_f), np.asarray(lp_u),
+                                   atol=1e-4)
+        for t in ("k", "v"):
+            np.testing.assert_allclose(np.asarray(cache_f[t]),
+                                       np.asarray(cache_u[t]), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention edge cases + gradient; traj_logprob kernel + gradient
+# ---------------------------------------------------------------------------
+
+class TestDecodeAttentionEdges:
+    @pytest.mark.parametrize("S,block_k", [(5, 128), (13, 8), (7, 16),
+                                           (100, 128)])
+    def test_unaligned_and_empty_rows(self, S, block_k):
+        """S < 8, S % block_k != 0, and kv_valid == 0 rows (which must come
+        back as defined zeros, not a garbage uniform average)."""
+        B, H, D = 3, 2, 8
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, H, D))
+        k = jax.random.normal(ks[1], (B, S, H, D))
+        v = jax.random.normal(ks[2], (B, S, H, D))
+        kv_valid = jnp.array([0, 1, S])
+        got = decode_attention_pallas(q, k, v, kv_valid, block_k=block_k,
+                                      interpret=True)
+        want = ref_decode_attention(q, k, v, kv_valid)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+        assert np.all(np.asarray(got[0]) == 0.0)
+
+    def test_grad_matches_dense(self):
+        B, S, H, D = 3, 7, 2, 8
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.normal(ks[0], (B, H, D))
+        k = jax.random.normal(ks[1], (B, S, H, D))
+        v = jax.random.normal(ks[2], (B, S, H, D))
+        kv_valid = jnp.array([0, 3, 7])
+        w = jax.random.normal(ks[3], (B, H, D))
+        f = lambda fn: lambda q, k, v: jnp.sum(fn(q, k, v) * w)
+        g_kern = jax.grad(f(lambda q, k, v: decode_attention_grad(
+            q, k, v, kv_valid)), argnums=(0, 1, 2))(q, k, v)
+        g_ref = jax.grad(f(lambda q, k, v: ref_decode_attention(
+            q, k, v, kv_valid)), argnums=(0, 1, 2))(q, k, v)
+        for a, b, tag in zip(g_kern, g_ref, "qkv"):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4, err_msg=tag)
+
+
+class TestTrajLogprob:
+    def _inputs(self, B, T, A, key=KEY):
+        ks = jax.random.split(key, 4)
+        logits = jax.random.normal(ks[0], (B, T, A))
+        actions = jax.random.randint(ks[1], (B, T), 0, A)
+        mask = jax.random.bernoulli(ks[2], 0.6, (B, T, A))
+        mask = jnp.logical_or(
+            mask, jax.nn.one_hot(actions, A, dtype=bool))  # action legal
+        valid = jax.random.bernoulli(ks[3], 0.7, (B, T))
+        return logits, actions, mask, valid
+
+    @pytest.mark.parametrize("T,block_t", [(13, 8), (7, 16), (50, 16),
+                                           (120, 128)])
+    def test_matches_oracle(self, T, block_t):
+        logits, actions, mask, valid = self._inputs(3, T, 5)
+        tot, step = traj_logprob_pallas(logits, actions, mask, valid,
+                                        block_t=block_t, interpret=True)
+        rtot, rstep = ref_traj_logprob(logits, actions, mask, valid)
+        np.testing.assert_allclose(np.asarray(tot), np.asarray(rtot),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(step), np.asarray(rstep),
+                                   atol=1e-5)
+
+    def test_grad_matches_dense(self):
+        """The closed-form VJP (softmax minus one-hot, valid-masked, with
+        both total and per-step cotangents) against jax.grad of the
+        oracle."""
+        logits, actions, mask, valid = self._inputs(3, 13, 5)
+        ks = jax.random.split(KEY, 2)
+        wt = jax.random.normal(ks[0], (3,))
+        ws = jax.random.normal(ks[1], (3, 13))
+
+        def loss(fn):
+            def inner(lg):
+                tot, step = fn(lg, actions, mask, valid)
+                return jnp.sum(tot * wt) + jnp.sum(step * ws)
+            return inner
+
+        g_kern = jax.grad(loss(lambda *a: traj_logprob(*a)))(logits)
+        g_ref = jax.grad(loss(lambda *a: ref_traj_logprob(*a)))(logits)
+        np.testing.assert_allclose(np.asarray(g_kern), np.asarray(g_ref),
+                                   atol=1e-4)
