@@ -15,9 +15,16 @@ Both servers produce bitwise-identical samples per request (the engine
 parity contract), so this measures scheduling alone.  Rows report
 requests/s (``it_per_s``) plus p50/p99 per-request latency; CI's
 serve-smoke job asserts the engine clears the >= 1.5x acceptance bar.
+
+A second pair of rows measures the *front* (ISSUE 8): the same request
+mix pushed by 8 concurrent clients through the threaded
+:class:`repro.serve.ServeFront` vs pushed serially through the legacy
+blocking single-threaded path — client-observed req/s and p99 under
+contention, sharing one engine/scheduler so only the front differs.
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import jax
@@ -80,7 +87,7 @@ def run(quick: bool = True):
 
     naive_rps = n_req / naive_s
     engine_rps = n_req / engine_s
-    return [
+    rows = [
         row("serve/bitseq120_naive", naive_rps,
             p50_ms=round(_pct(lat_naive, 50), 1),
             p99_ms=round(_pct(lat_naive, 99), 1),
@@ -90,4 +97,76 @@ def run(quick: bool = True):
             p99_ms=round(_pct(lat_engine, 99), 1),
             requests=n_req, samples=total, lanes=lanes,
             speedup_vs_naive=round(engine_rps / naive_rps, 2)),
+    ]
+    rows.extend(_front_rows(quick))
+    return rows
+
+
+def _front_rows(quick: bool):
+    """Threaded front (8 concurrent clients) vs the legacy single-threaded
+    blocking path, client-observed.  One bitseq120 engine/scheduler config
+    on both sides, so the delta is pure front scheduling + contention."""
+    from repro.serve import SampleRequest, Scheduler, ServeFront
+
+    n_clients = 8
+    n_per = 2 if quick else 6
+    sizes = [1, 2, 8, 3, 1, 4, 2, 8]
+    base = dict(env="bitseq", overrides={})
+
+    def reqs_for(tid):
+        return [SampleRequest(num_samples=sizes[(tid + j) % len(sizes)],
+                              seed=2000 + tid * n_per + j, **base)
+                for j in range(n_per)]
+
+    # -- serial baseline: requests processed one at a time ------------------
+    sched_s = Scheduler(num_lanes=32)
+    rid = sched_s.submit(SampleRequest(num_samples=2, seed=0, **base))
+    sched_s.run(only=(rid,))            # compile
+    all_reqs = [r for t in range(n_clients) for r in reqs_for(t)]
+    t0 = time.perf_counter()
+    lat_serial = []
+    for req in all_reqs:
+        ts = time.perf_counter()
+        rid = sched_s.submit(req)
+        sched_s.run(only=(rid,))
+        lat_serial.append(time.perf_counter() - ts)
+    serial_s = time.perf_counter() - t0
+
+    # -- threaded front: 8 concurrent clients -------------------------------
+    sched_c = Scheduler(num_lanes=32)
+    front = ServeFront(sched_c, max_queue=64, checkpoint_poll_s=None)
+    front.request(SampleRequest(num_samples=2, seed=0, **base))  # compile
+    lat_conc, lock = [], threading.Lock()
+
+    def client(tid):
+        for req in reqs_for(tid):
+            ts = time.perf_counter()
+            front.request(req, client=f"bench-{tid}")
+            dt = time.perf_counter() - ts
+            with lock:
+                lat_conc.append(dt)
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    conc_s = time.perf_counter() - t0
+    front.shutdown(drain=True, timeout=60.0)
+
+    n_req = len(all_reqs)
+    serial_rps = n_req / serial_s
+    conc_rps = n_req / conc_s
+    return [
+        row("serve/bitseq120_front_serial", serial_rps,
+            p50_ms=round(_pct(lat_serial, 50), 1),
+            p99_ms=round(_pct(lat_serial, 99), 1),
+            requests=n_req, clients=1),
+        row("serve/bitseq120_front_concurrent8", conc_rps,
+            p50_ms=round(_pct(lat_conc, 50), 1),
+            p99_ms=round(_pct(lat_conc, 99), 1),
+            requests=n_req, clients=n_clients,
+            speedup_vs_serial=round(conc_rps / serial_rps, 2)),
     ]

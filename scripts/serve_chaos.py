@@ -1,0 +1,235 @@
+"""Chaos smoke for the hardened serving front (CI ``serve-chaos`` job).
+
+Stands up a live threaded HTTP server (the exact stack ``repro.launch.serve
+--http`` runs) under a seeded random :class:`FaultPlan` firing at every
+injection point (transient step failures, latency spikes, lane poisoning,
+restore failures) while HTTP client threads hammer it with mixed requests —
+some with tight deadlines, some deadline-less, one env served from a
+checkpoint directory that *advances mid-run* (exercising engine refresh
+under load) — then delivers a real ``SIGTERM`` and drains.  Asserts the
+contract the robustness tier promises:
+
+- **zero hung requests**: every request terminates with either a 200 or a
+  typed :mod:`repro.serve.errors` status (400/408/429/500/503/504 with a
+  machine-readable ``kind``) before its timeout;
+- **correct successes**: every 200 body is *bitwise* equal to its solo
+  ``forward_rollout`` reference, no matter which faults fired, how many
+  times its engine was quarantined/replayed, or whether the checkpoint
+  refreshed under it (both checkpoint steps carry identical params, so the
+  oracle stays valid while the eviction/rebuild path runs for real);
+- **clean SIGTERM drain**: the signal handler stops admission, finishes
+  in-flight lanes, flushes every response, and joins every runner.
+
+Deterministic: ``--seed`` fixes the fault schedule and the request mix, so
+a failing run is replayable.
+
+Usage (CI runs the default ~30s budget)::
+
+    PYTHONPATH=src python scripts/serve_chaos.py --duration 30 --seed 0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import signal
+import sys
+import tempfile
+import threading
+import time
+from http.client import HTTPConnection
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--duration", type=float, default=30.0,
+                    help="seconds of chaos load (after warmup/compile)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds the fault schedule AND the request mix")
+    ap.add_argument("--clients", type=int, default=6)
+    ap.add_argument("--lanes", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    import numpy as np
+
+    from repro.serve import (FaultPlan, FaultSpec, SampleRequest, Scheduler,
+                             ServeFront, make_server)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="serve_chaos_ckpt_")
+    envspecs = [("bitseq", {"n": 16, "k": 4}, None),
+                ("hypergrid", {"dim": 2, "side": 6}, ckpt_dir)]
+    # a small closed seed set so bitwise references are computed once each
+    seeds = [200 + i for i in range(8)]
+    typed = {400, 408, 429, 500, 503, 504}
+
+    plan = FaultPlan([
+        FaultSpec("engine_step", rate=0.04, detail="chaos"),
+        FaultSpec("latency", rate=0.10, latency_s=0.05),
+        FaultSpec("lane_state", rate=0.02),
+        FaultSpec("restore", rate=0.15),
+    ], seed=args.seed)
+    sched = Scheduler(num_lanes=args.lanes, fault_plan=plan,
+                      max_step_retries=2, retry_backoff_s=0.005)
+    front = ServeFront(sched, max_queue=16, checkpoint_poll_s=0.2,
+                       hard_timeout_s=120.0)
+
+    # solo bitwise references + the checkpoint both steps will carry: the
+    # hypergrid env is served from ckpt_dir holding the SAME fresh-init
+    # params at step 1 and (published mid-run) step 2, so the refresh
+    # eviction/rebuild machinery runs for real while references stay valid
+    import jax
+
+    from repro import recipes
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.rollout import forward_rollout
+    from repro.envs.registry import get_env, make_env
+    refs = {}
+    for env, ov, ckpt in envspecs:
+        e = make_env(env, **ov)
+        ep = e.init(jax.random.PRNGKey(0))
+        pol = recipes.get(get_env(env).recipe).make_policy(e)
+        pp = pol.init(jax.random.PRNGKey(0))
+        if ckpt is not None:
+            CheckpointManager(ckpt, keep=4).save(
+                1, {".train": {".params": pp}})
+        for seed in seeds:
+            for ns in (1, 2, 3):
+                b = forward_rollout(jax.random.PRNGKey(seed), e, ep, pol,
+                                    pp, ns)
+                refs[(env, seed, ns)] = (np.asarray(b.obs[-1]),
+                                         np.asarray(b.log_reward))
+
+    # warm the compile caches faultlessly so chaos measures serving, not XLA
+    warm_plan, sched.fault_plan = sched.fault_plan, None
+    for env, ov, ckpt in envspecs:
+        front.request(SampleRequest(env=env, num_samples=2, seed=seeds[0],
+                                    overrides=ov, checkpoint=ckpt))
+    sched.fault_plan = warm_plan
+    for eng in sched._engines.values():
+        eng._faults = warm_plan
+
+    # the live threaded server, drained by a real SIGTERM (the exact
+    # handler shape repro.launch.serve --http installs)
+    server = make_server(front, host="127.0.0.1", port=0)
+    port = server.server_address[1]
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    drain_report = {}
+    drained = threading.Event()
+
+    def on_sigterm(signum, frame):
+        def stop():
+            drain_report.update(front.shutdown(drain=True, timeout=60.0))
+            server.shutdown()
+            drained.set()
+        threading.Thread(target=stop, daemon=True).start()
+
+    signal.signal(signal.SIGTERM, on_sigterm)
+
+    stop = threading.Event()
+    lock = threading.Lock()
+    tally = {"ok": 0, "typed_error": 0, "hung": 0, "mismatch": 0,
+             "untyped": 0}
+    kinds: dict = {}
+
+    def client(tid: int) -> None:
+        rng = random.Random(args.seed * 1000 + tid)
+        conn = HTTPConnection("127.0.0.1", port, timeout=130.0)
+        while not stop.is_set():
+            env, ov, ckpt = envspecs[rng.randrange(len(envspecs))]
+            seed = rng.choice(seeds)
+            ns = rng.choice((1, 2, 3))
+            deadline = rng.choice((None, None, None, 0.4, 1.5))
+            body = {"env": env, "num_samples": ns, "seed": seed,
+                    "overrides": ov}
+            if ckpt is not None:
+                body["checkpoint"] = ckpt
+            if deadline is not None:
+                body["deadline_s"] = deadline
+            try:
+                conn.request("POST", "/sample", json.dumps(body),
+                             {"Content-Type": "application/json"})
+                resp = conn.getresponse()
+                doc = json.loads(resp.read())
+            except Exception:            # timeout/refused = hung or dropped
+                if stop.is_set():        # server went down mid-drain: fine
+                    return
+                with lock:
+                    tally["hung"] += 1
+                conn = HTTPConnection("127.0.0.1", port, timeout=130.0)
+                continue
+            if resp.status == 200:
+                obs, lr = refs[(env, seed, ns)]
+                good = (np.array_equal(np.asarray(doc["samples"]), obs)
+                        and np.allclose(doc["log_rewards"], lr))
+                with lock:
+                    tally["ok" if good else "mismatch"] += 1
+            elif resp.status in typed and "kind" in doc:
+                with lock:
+                    tally["typed_error"] += 1
+                    kinds[doc["kind"]] = kinds.get(doc["kind"], 0) + 1
+            else:
+                with lock:
+                    tally["untyped"] += 1
+                    kinds[f"http_{resp.status}"] = \
+                        kinds.get(f"http_{resp.status}", 0) + 1
+
+    threads = [threading.Thread(target=client, args=(t,), daemon=True)
+               for t in range(args.clients)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    # mid-run: training "publishes" a newer complete checkpoint (same
+    # params) — the hypergrid engine must refresh under load
+    time.sleep(args.duration / 2)
+    e = make_env("hypergrid", dim=2, side=6)
+    pol = recipes.get(get_env("hypergrid").recipe).make_policy(e)
+    pp_grid = pol.init(jax.random.PRNGKey(0))
+    CheckpointManager(ckpt_dir, keep=4).save(
+        2, {".train": {".params": pp_grid}})
+    time.sleep(args.duration / 2)
+    stop.set()
+    for t in threads:
+        t.join(timeout=150.0)
+        if t.is_alive():                 # a hung client IS the failure mode
+            tally["hung"] += 1
+
+    signal.raise_signal(signal.SIGTERM)  # the real drain path
+    if not drained.wait(timeout=90.0):
+        drain_report["drained"] = False
+    refreshes = front.stats()["counters"].get("checkpoint_refreshes", 0)
+
+    elapsed = time.monotonic() - t0
+    total = tally["ok"] + tally["typed_error"]
+    print(f"chaos: {elapsed:.1f}s, {total} requests terminated "
+          f"({tally['ok']} ok, {tally['typed_error']} typed errors "
+          f"{dict(sorted(kinds.items()))})")
+    print(f"fault points fired: "
+          f"{ {p: s['fired'] for p, s in warm_plan.stats().items()} }")
+    print(f"front counters: {front.stats()['counters']}")
+    print(f"checkpoint refreshes under load: {refreshes}")
+    print(f"drain report: {drain_report}")
+
+    failures = []
+    if tally["hung"]:
+        failures.append(f"{tally['hung']} hung request(s)/client(s)")
+    if tally["mismatch"]:
+        failures.append(f"{tally['mismatch']} bitwise mismatches")
+    if tally["untyped"]:
+        failures.append(f"{tally['untyped']} untyped error responses")
+    if not drain_report.get("drained"):
+        failures.append(f"unclean SIGTERM drain: {drain_report}")
+    if refreshes < 1:
+        failures.append("mid-flight checkpoint refresh never happened")
+    if tally["ok"] == 0:
+        failures.append("no request ever succeeded under chaos")
+    if failures:
+        print("CHAOS FAIL: " + "; ".join(failures), file=sys.stderr)
+        return 1
+    print("CHAOS OK: every request terminated with a correct result or a "
+          "typed error; checkpoint refreshed under load; SIGTERM drain "
+          "was clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -122,6 +122,23 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def newer_than(self, step: Optional[int]) -> Optional[int]:
+        """The newest complete checkpoint step strictly after ``step``
+        (any complete step when ``step`` is None), else None.
+
+        This is the serving tier's checkpoint-advance probe: an engine
+        built at ``step=None`` (latest) polls this between requests and
+        refreshes itself when training publishes a newer checkpoint —
+        completeness is the MANIFEST.json marker, so a mid-write
+        ``step_<N>.tmp`` never triggers a refresh onto partial params.
+        """
+        latest = self.latest_step()
+        if latest is None:
+            return None
+        if step is None or latest > int(step):
+            return latest
+        return None
+
     # -- restore --------------------------------------------------------------
     def _load_arrays(self, step: int) -> Dict[str, np.ndarray]:
         """All saved leaves of ``step`` keyed by flattened name."""

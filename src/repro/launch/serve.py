@@ -1,10 +1,11 @@
 """Serving driver: the CLI/HTTP frontend over :mod:`repro.serve`.
 
 Turns trained GFlowNet checkpoints into a sampling service — a compiled,
-continuously-batched engine per (env, transforms, checkpoint), scheduled by
-:class:`repro.serve.Scheduler` (this replaces the former dormant LM-decode
-driver; the LM decode path lives on in ``repro.models.lm`` and
-``tests/test_serving.py``).
+continuously-batched engine per (env, transforms, checkpoint), admitted
+through the hardened concurrent front (:class:`repro.serve.ServeFront`:
+bounded queues, deadlines, retries, quarantine/rebuild, /healthz +
+/stats).  (This replaces the former dormant LM-decode driver; the LM
+decode path lives on in ``repro.models.lm`` and ``tests/test_serving.py``.)
 
 One-shot sampling::
 
@@ -14,15 +15,20 @@ One-shot sampling::
         --checkpoint checkpoints/bitseq_tb --num-samples 64 \
         --temperature 0.8 --reward-beta 2.0 --json
 
-HTTP endpoint (POST /sample, GET /envs — see :mod:`repro.serve.api`)::
+HTTP endpoint (POST /sample, GET /envs, /healthz, /stats — see
+:mod:`repro.serve.api`); SIGTERM drains cleanly (stop admitting, finish
+in-flight lanes, flush responses)::
 
-    PYTHONPATH=src python -m repro.launch.serve --http --port 8777
+    PYTHONPATH=src python -m repro.launch.serve --http --port 8777 \
+        --deadline 30 --max-queue 64
 """
 from __future__ import annotations
 
 import argparse
 import json
+import signal
 import sys
+import threading
 import time
 
 
@@ -79,13 +85,75 @@ def main(argv=None) -> int:
                          "one-shot request")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8777)
+    # robustness knobs of the concurrent front (README "Serving" section)
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="per-engine admission queue bound; a full queue "
+                         "returns 503 + Retry-After (backpressure)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="SEC",
+                    help="default per-request deadline: 408 if it expires "
+                         "while queued, 504 with partial progress if it "
+                         "expires mid-execution (default: none)")
+    ap.add_argument("--max-samples", type=int, default=4096,
+                    help="per-request num_samples bound (400 beyond it)")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="transient engine-step failures retried (with "
+                         "backoff) before the engine is quarantined "
+                         "and rebuilt")
+    ap.add_argument("--checkpoint-poll", type=float, default=1.0,
+                    metavar="SEC",
+                    help="how often to probe step=None checkpoint dirs "
+                         "for newer complete checkpoints (engine refresh); "
+                         "0 disables")
+    ap.add_argument("--max-inflight-per-client", type=int, default=None,
+                    help="per-client concurrent request cap (429 beyond "
+                         "it; default: unlimited)")
+    ap.add_argument("--single-thread", action="store_true",
+                    help="serve the legacy blocking single-threaded "
+                         "endpoint instead of the concurrent front "
+                         "(benchmark baseline)")
     args = ap.parse_args(argv)
 
-    from ..serve import SampleRequest, Scheduler, serve_http
+    from ..serve import SampleRequest, Scheduler, ServeFront, make_server
 
-    sched = Scheduler(num_lanes=args.lanes)
+    sched = Scheduler(num_lanes=args.lanes,
+                      max_step_retries=args.retries)
     if args.http:
-        serve_http(sched, host=args.host, port=args.port)
+        if args.single_thread:
+            target = sched
+        else:
+            target = ServeFront(
+                sched, max_queue=args.max_queue,
+                default_deadline_s=args.deadline,
+                max_num_samples=args.max_samples,
+                max_inflight_per_client=args.max_inflight_per_client,
+                checkpoint_poll_s=(args.checkpoint_poll or None))
+        server = make_server(target, host=args.host, port=args.port)
+        threaded = not args.single_thread
+        print(f"serving on http://{args.host}:{args.port}  "
+              f"({'threaded front' if threaded else 'single-threaded'}; "
+              f"POST /sample, GET /envs"
+              + (", /healthz, /stats" if threaded else "")
+              + "; SIGTERM drains, ctrl-c to stop)")
+
+        def drain(signum, frame):
+            # clean SIGTERM drain: stop admitting (503 shutting_down),
+            # finish in-flight lanes, flush responses, then stop serving.
+            # server.shutdown() must come from another thread.
+            def stop():
+                if threaded:
+                    report = target.shutdown(drain=True, timeout=60.0)
+                    print(f"drained: {report}")
+                server.shutdown()
+            threading.Thread(target=stop, daemon=True).start()
+
+        signal.signal(signal.SIGTERM, drain)
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            if threaded:
+                target.shutdown(drain=True, timeout=10.0)
+        finally:
+            server.server_close()
         return 0
 
     if args.env is None:
@@ -113,7 +181,12 @@ def main(argv=None) -> int:
                         step=args.step)
     t0 = time.perf_counter()
     rid = sched.submit(req)
-    result = sched.run()[rid]
+    results = sched.run(only=(rid,))
+    if rid not in results:
+        print("error: request produced no result (engine drained without "
+              "completing it)", file=sys.stderr)
+        return 1
+    result = results[rid]
     dt = time.perf_counter() - t0
 
     if args.json:

@@ -1,18 +1,35 @@
 """Sampling-as-a-service: a compiled, continuously-batched GFlowNet
-inference engine over trained checkpoints.
+inference engine over trained checkpoints, behind a hardened concurrent
+front.
 
 - :class:`~repro.serve.engine.SamplingEngine` — fixed lane pool, one jitted
   step shared by all lanes, host-side drain + recompile-free refill
-  (continuous batching over variable-length rollouts).
+  (continuous batching over variable-length rollouts), retry-with-backoff
+  around transient step failures, drain-time lane validation.
 - :class:`~repro.serve.scheduler.Scheduler` — coalesces requests by
   (env, transforms, checkpoint) into engine instances; per-request
-  temperatures ride on lanes.
+  temperatures ride on lanes; eviction/refresh when checkpoints advance.
+- :class:`~repro.serve.front.ServeFront` — bounded admission queues
+  feeding per-engine-key runner threads; deadlines, backpressure,
+  quarantine-and-rebuild with bitwise-safe replay, clean SIGTERM drain,
+  /healthz + /stats observability.
+- :mod:`~repro.serve.errors` — the typed error taxonomy (one HTTP status
+  per failure mode); :mod:`~repro.serve.faults` — deterministic fault
+  injection for tests and the serve-chaos CI job.
 - :mod:`~repro.serve.api` — request/response dataclasses + stdlib-HTTP
-  JSON endpoint; the CLI lives in :mod:`repro.launch.serve`.
+  JSON endpoints; the CLI lives in :mod:`repro.launch.serve`.
 """
-from .api import SampleRequest, SampleResult, serve_http
+from .api import SampleRequest, SampleResult, make_server, serve_http
 from .engine import EngineResult, SamplingEngine
+from .errors import (BadRequest, DeadlineExceeded, EngineFailure,
+                     LanePoisoned, QueueFull, QueueTimeout, ServeError,
+                     ShuttingDown, TooManyRequests)
+from .faults import FaultPlan, FaultSpec, InjectedFault
+from .front import ServeFront
 from .scheduler import Scheduler
 
-__all__ = ["SampleRequest", "SampleResult", "serve_http",
-           "EngineResult", "SamplingEngine", "Scheduler"]
+__all__ = ["SampleRequest", "SampleResult", "serve_http", "make_server",
+           "EngineResult", "SamplingEngine", "Scheduler", "ServeFront",
+           "ServeError", "BadRequest", "QueueTimeout", "TooManyRequests",
+           "EngineFailure", "LanePoisoned", "QueueFull", "ShuttingDown",
+           "DeadlineExceeded", "FaultPlan", "FaultSpec", "InjectedFault"]

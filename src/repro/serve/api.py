@@ -1,18 +1,24 @@
-"""Serving frontend: request/response dataclasses + a stdlib-HTTP JSON
-endpoint over the :class:`~repro.serve.scheduler.Scheduler`.
+"""Serving frontend: request/response dataclasses + the HTTP JSON surface.
 
-The wire format is deliberately tiny — one POST route, JSON in/out, no
-dependencies beyond ``http.server`` — because the interesting machinery
-(compiled continuous batching, per-lane temperatures, checkpoint loading)
-all lives below the :class:`SampleRequest` surface:
+The wire format is deliberately tiny — JSON in/out, no dependencies beyond
+``http.server`` — because the interesting machinery (compiled continuous
+batching, per-lane temperatures, checkpoint loading, and the robustness
+layer in :mod:`repro.serve.front`) all lives below the
+:class:`SampleRequest` surface:
 
     POST /sample   {"env": "bitseq", "num_samples": 4, "seed": 7,
                     "logit_temp": 0.8, "reward_beta": 2.0,
                     "transforms": [], "overrides": {"n": 16, "k": 4},
-                    "checkpoint": "checkpoints/bitseq_tb", "step": null}
+                    "checkpoint": "checkpoints/bitseq_tb", "step": null,
+                    "deadline_s": 30.0}
     GET  /envs     registry listing with per-env serving support
+    GET  /healthz  liveness + drain state (front endpoint only)
+    GET  /stats    queue depth, lane occupancy, latency percentiles,
+                   retry/eviction counters (front endpoint only)
 
-CLI quickstart (see the README "Serving" section)::
+Every failure maps to a typed :mod:`repro.serve.errors` error and exactly
+one HTTP status (see that module's table).  CLI quickstart (README
+"Serving" section)::
 
     python -m repro.launch.serve --env bitseq --smoke --num-samples 4
     python -m repro.launch.serve --http --port 8777
@@ -21,8 +27,16 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from http.server import BaseHTTPRequestHandler, HTTPServer
+import math
+from http.server import (BaseHTTPRequestHandler, HTTPServer,
+                         ThreadingHTTPServer)
 from typing import Any, Dict, Optional, Tuple
+
+from .errors import BadRequest, ServeError
+
+#: default upper bound on a single request's sample count; configurable on
+#: the front (``max_num_samples``) and enforced by request validation
+DEFAULT_MAX_NUM_SAMPLES = 4096
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +57,10 @@ class SampleRequest:
     checkpoint   checkpoint directory to load policy params from (via
                  ``CheckpointManager.restore_subtree``); fresh-init when None
     step         checkpoint step (default: latest complete)
+    deadline_s   per-request deadline: expiry while queued returns 408,
+                 expiry mid-execution cancels the request's lanes and
+                 returns 504 with partial-progress metadata (front only;
+                 None defers to the front's default)
     """
     env: str
     num_samples: int = 1
@@ -53,20 +71,78 @@ class SampleRequest:
     overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
     checkpoint: Optional[str] = None
     step: Optional[int] = None
+    deadline_s: Optional[float] = None
 
     @classmethod
-    def from_dict(cls, d: Dict[str, Any]) -> "SampleRequest":
+    def from_dict(cls, d: Dict[str, Any],
+                  max_num_samples: int = DEFAULT_MAX_NUM_SAMPLES
+                  ) -> "SampleRequest":
+        if not isinstance(d, dict):
+            raise BadRequest("request body must be a JSON object, got "
+                             f"{type(d).__name__}")
         known = {f.name for f in dataclasses.fields(cls)}
-        unknown = set(d) - known
+        unknown = sorted(set(d) - known)
         if unknown:
-            raise ValueError(f"unknown request field(s) {sorted(unknown)}; "
+            raise BadRequest(f"unknown request field(s) {unknown}; "
                              f"accepted: {sorted(known)}")
         if "env" not in d:
-            raise ValueError("request needs an 'env' field")
+            raise BadRequest("request needs an 'env' field")
         d = dict(d)
         if "transforms" in d:
+            if not isinstance(d["transforms"], (list, tuple)):
+                raise BadRequest("'transforms' must be a list of specs, got "
+                                 f"{type(d['transforms']).__name__}")
             d["transforms"] = tuple(d["transforms"])
-        return cls(**d)
+        req = cls(**d)
+        validate_request(req, max_num_samples=max_num_samples)
+        return req
+
+
+def _check_int(name: str, v: Any) -> int:
+    if isinstance(v, bool) or not isinstance(v, int):
+        raise BadRequest(f"'{name}' must be an integer, got {v!r}")
+    return v
+
+
+def validate_request(req: SampleRequest,
+                     max_num_samples: int = DEFAULT_MAX_NUM_SAMPLES) -> None:
+    """Hard request validation — every rejection is a typed
+    :class:`BadRequest` naming the offending field.  Shared by
+    :meth:`SampleRequest.from_dict` (wire path) and
+    :meth:`repro.serve.front.ServeFront.submit` (direct path)."""
+    if not isinstance(req.env, str) or not req.env:
+        raise BadRequest(f"'env' must be a non-empty string, "
+                         f"got {req.env!r}")
+    n = _check_int("num_samples", req.num_samples)
+    if not 1 <= n <= max_num_samples:
+        raise BadRequest(f"'num_samples' must be in [1, {max_num_samples}], "
+                         f"got {n}")
+    _check_int("seed", req.seed)
+    for name in ("logit_temp", "reward_beta"):
+        v = getattr(req, name)
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            raise BadRequest(f"'{name}' must be a number, got {v!r}")
+        if not math.isfinite(v) or v < 0:
+            raise BadRequest(f"'{name}' must be finite and non-negative, "
+                             f"got {v!r}")
+    for t in req.transforms:
+        if not isinstance(t, str):
+            raise BadRequest(f"'transforms' entries must be strings, "
+                             f"got {t!r}")
+    if not isinstance(req.overrides, dict) or \
+            not all(isinstance(k, str) for k in req.overrides):
+        raise BadRequest("'overrides' must be an object with string keys")
+    if req.checkpoint is not None and not isinstance(req.checkpoint, str):
+        raise BadRequest(f"'checkpoint' must be a string path or null, "
+                         f"got {req.checkpoint!r}")
+    if req.step is not None:
+        _check_int("step", req.step)
+    if req.deadline_s is not None:
+        v = req.deadline_s
+        if isinstance(v, bool) or not isinstance(v, (int, float)) \
+                or not math.isfinite(v) or v <= 0:
+            raise BadRequest(f"'deadline_s' must be a finite positive "
+                             f"number or null, got {v!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,58 +177,155 @@ def result_from_engine(request: SampleRequest, engine_result,
 
 
 # ---------------------------------------------------------------------------
-# stdlib HTTP endpoint
+# stdlib HTTP endpoints
 # ---------------------------------------------------------------------------
 
+def _envs_doc() -> Dict[str, Any]:
+    from ..envs.registry import env_names, get_env
+    rows = [{"env": n,
+             "serving": get_env(n).serving,
+             "recipe": get_env(n).recipe,
+             "description": get_env(n).description}
+            for n in env_names()]
+    return {"envs": rows}
+
+
+class _JSONHandler(BaseHTTPRequestHandler):
+    def _reply(self, code: int, doc: Dict[str, Any],
+               headers: Optional[Dict[str, str]] = None) -> None:
+        body = json.dumps(doc).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, fmt, *args):  # quiet by default
+        pass
+
+    def _read_request(self, max_num_samples: int) -> SampleRequest:
+        n = int(self.headers.get("Content-Length", 0))
+        try:
+            doc = json.loads(self.rfile.read(n))
+        except json.JSONDecodeError as e:
+            raise BadRequest(f"request body is not valid JSON: {e}")
+        return SampleRequest.from_dict(doc, max_num_samples=max_num_samples)
+
+
 def make_handler(scheduler):
-    """A ``BaseHTTPRequestHandler`` bound to ``scheduler``."""
+    """A single-threaded ``BaseHTTPRequestHandler`` bound to ``scheduler``
+    (the legacy blocking front; :func:`make_front_handler` is the hardened
+    concurrent one).  Every failure is a structured JSON error: validation
+    problems are 400s, anything that escapes the engine — including a crash
+    that leaves the request without a result — is a structured 500 instead
+    of a dropped connection."""
 
-    class Handler(BaseHTTPRequestHandler):
-        def _reply(self, code: int, doc: Dict[str, Any]) -> None:
-            body = json.dumps(doc).encode()
-            self.send_response(code)
-            self.send_header("Content-Type", "application/json")
-            self.send_header("Content-Length", str(len(body)))
-            self.end_headers()
-            self.wfile.write(body)
-
-        def log_message(self, fmt, *args):  # quiet by default
-            pass
-
+    class Handler(_JSONHandler):
         def do_GET(self):
             if self.path.rstrip("/") in ("", "/envs"):
-                from ..envs.registry import env_names, get_env
-                rows = [{"env": n,
-                         "serving": get_env(n).serving,
-                         "recipe": get_env(n).recipe,
-                         "description": get_env(n).description}
-                        for n in env_names()]
-                self._reply(200, {"envs": rows})
+                self._reply(200, _envs_doc())
             else:
-                self._reply(404, {"error": f"unknown path {self.path!r}"})
+                self._reply(404, {"error": f"unknown path {self.path!r}",
+                                  "kind": "bad_request"})
 
         def do_POST(self):
             if self.path.rstrip("/") != "/sample":
-                self._reply(404, {"error": f"unknown path {self.path!r}"})
+                self._reply(404, {"error": f"unknown path {self.path!r}",
+                                  "kind": "bad_request"})
                 return
             try:
-                n = int(self.headers.get("Content-Length", 0))
-                req = SampleRequest.from_dict(json.loads(self.rfile.read(n)))
+                req = self._read_request(DEFAULT_MAX_NUM_SAMPLES)
                 rid = scheduler.submit(req)
-                result = scheduler.run()[rid]
-                self._reply(200, result.to_dict())
+            except ServeError as e:
+                self._reply(e.code, e.to_dict(), e.headers())
+                return
             except (ValueError, KeyError, json.JSONDecodeError) as e:
-                self._reply(400, {"error": str(e)})
+                self._reply(400, {"error": str(e), "kind": "bad_request"})
+                return
+            try:
+                results = scheduler.run(only=(rid,))
+                if rid not in results:
+                    self._reply(500, {
+                        "error": "request produced no result (engine "
+                                 "drained without completing it)",
+                        "kind": "engine_failure"})
+                    return
+                self._reply(200, results[rid].to_dict())
+            except ServeError as e:
+                self._reply(e.code, e.to_dict(), e.headers())
+            except Exception as e:
+                self._reply(500, {"error": f"{type(e).__name__}: {e}",
+                                  "kind": "engine_failure"})
 
     return Handler
 
 
-def serve_http(scheduler, host: str = "127.0.0.1", port: int = 8777,
+def make_front_handler(front):
+    """The hardened concurrent handler over a
+    :class:`repro.serve.front.ServeFront`: handlers validate, enqueue, and
+    block on a per-request future — JAX never runs on a socket thread —
+    and every typed :class:`ServeError` maps to its HTTP status (503
+    backpressure carries ``Retry-After``, 504 carries partial progress).
+    Serve it with ``ThreadingHTTPServer`` so slow requests don't block
+    other clients."""
+
+    class Handler(_JSONHandler):
+        def do_GET(self):
+            path = self.path.rstrip("/")
+            if path in ("", "/envs"):
+                self._reply(200, _envs_doc())
+            elif path == "/healthz":
+                doc = front.healthz()
+                self._reply(200 if doc["status"] == "ok" else 503, doc)
+            elif path == "/stats":
+                self._reply(200, front.stats())
+            else:
+                self._reply(404, {"error": f"unknown path {self.path!r}",
+                                  "kind": "bad_request"})
+
+        def do_POST(self):
+            if self.path.rstrip("/") != "/sample":
+                self._reply(404, {"error": f"unknown path {self.path!r}",
+                                  "kind": "bad_request"})
+                return
+            try:
+                req = self._read_request(front.max_num_samples)
+                result = front.request(req, client=self.client_address[0])
+                self._reply(200, result.to_dict())
+            except ServeError as e:
+                self._reply(e.code, e.to_dict(), e.headers())
+            except (ValueError, KeyError) as e:
+                self._reply(400, {"error": str(e), "kind": "bad_request"})
+            except Exception as e:
+                self._reply(500, {"error": f"{type(e).__name__}: {e}",
+                                  "kind": "engine_failure"})
+
+    return Handler
+
+
+def make_server(target, host: str = "127.0.0.1", port: int = 8777):
+    """Build the right HTTP server for ``target``: a
+    :class:`~repro.serve.front.ServeFront` gets the threaded handler on a
+    ``ThreadingHTTPServer`` (concurrent, hardened); a bare
+    :class:`~repro.serve.scheduler.Scheduler` keeps the legacy blocking
+    single-threaded endpoint."""
+    if hasattr(target, "healthz"):        # a ServeFront
+        return ThreadingHTTPServer((host, port), make_front_handler(target))
+    return HTTPServer((host, port), make_handler(target))
+
+
+def serve_http(target, host: str = "127.0.0.1", port: int = 8777,
                log=print) -> None:
-    """Blocking single-threaded JSON endpoint over ``scheduler``."""
-    server = HTTPServer((host, port), make_handler(scheduler))
+    """Blocking JSON endpoint over ``target`` (front or scheduler)."""
+    server = make_server(target, host, port)
+    threaded = isinstance(server, ThreadingHTTPServer)
     log(f"serving on http://{host}:{port}  "
-        f"(POST /sample, GET /envs; ctrl-c to stop)")
+        f"({'threaded front' if threaded else 'single-threaded'}; "
+        f"POST /sample, GET /envs"
+        + (", /healthz, /stats" if threaded else "")
+        + "; ctrl-c to stop)")
     try:
         server.serve_forever()
     except KeyboardInterrupt:

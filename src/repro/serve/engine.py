@@ -45,6 +45,7 @@ full re-observation per step.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import deque
 from typing import Any, Dict, List, NamedTuple, Optional, Union
@@ -57,6 +58,7 @@ from ..core.rollout import _cache_engaged, _policy_entry
 from ..core.types import pytree_dataclass, sample_masked_per_env
 from ..envs.base import Environment, _select_state
 from ..envs.transforms import RewardExponent, TransformedParams
+from .errors import EngineFailure, LanePoisoned
 
 
 @pytree_dataclass
@@ -115,7 +117,9 @@ class SamplingEngine:
                  *, num_lanes: int = 16,
                  use_cache: Union[bool, str] = "auto",
                  max_steps: Optional[int] = None,
-                 steps_per_sync: Union[int, str] = "auto"):
+                 steps_per_sync: Union[int, str] = "auto",
+                 fault_plan=None, max_step_retries: int = 2,
+                 retry_backoff_s: float = 0.02):
         policy, apply_fn = _policy_entry(policy)
         self.cached = _cache_engaged(env, policy, use_cache)
         self.env = RewardExponent(env, beta=1.0)
@@ -140,6 +144,13 @@ class SamplingEngine:
         self._next_id = 0
         self._occupied = np.zeros(L, bool)
         self.steps_run = 0
+        self._faults = fault_plan
+        self.max_step_retries = int(max_step_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        #: robustness counters surfaced through the front's /stats
+        self.counters: Dict[str, int] = {
+            "requests": 0, "completed": 0, "cancelled": 0,
+            "blocks": 0, "step_retries": 0, "step_failures": 0}
 
         env_w = self.env
 
@@ -283,6 +294,7 @@ class SamplingEngine:
         self._requests[rid] = {"num_samples": int(num_samples),
                                "collected": {},
                                "t0": time.perf_counter()}
+        self.counters["requests"] += 1
         return rid
 
     # -- lane pool management ------------------------------------------------
@@ -326,6 +338,21 @@ class SamplingEngine:
         rid = np.asarray(self.lane.request_id)
         eid = np.asarray(self.lane.env_id)
         steps = np.asarray(self.lane.t)
+        # drain-time validation: a finished lane must carry a finite
+        # log-reward and a trajectory length the env can actually produce.
+        # Anything else means device state was corrupted (a lane_state
+        # fault, or a real bug) — surface it as a typed LanePoisoned so the
+        # front quarantines this engine and replays its requests, instead
+        # of silently returning garbage samples.
+        bad = [int(b) for b in idx
+               if not np.isfinite(log_r[b]) or not 1 <= steps[b] <= self.T]
+        if bad:
+            raise LanePoisoned(
+                f"drained lane(s) {bad} carry malformed state "
+                f"(log_r={[float(log_r[b]) for b in bad]}, "
+                f"steps={[int(steps[b]) for b in bad]})",
+                extra={"lanes": bad,
+                       "request_ids": [int(rid[b]) for b in bad]})
         now = time.perf_counter()
         for b in idx:
             req = self._requests[int(rid[b])]
@@ -342,18 +369,120 @@ class SamplingEngine:
                                            np.float32),
                     steps=np.asarray([g[2] for g in got], np.int32),
                     latency_s=now - req["t0"])
+                self.counters["completed"] += 1
+
+    def _poison_occupied_lanes(self) -> None:
+        """lane_state fault: overwrite every occupied lane's accumulated
+        log-reward with NaN — malformed device state that drain-time
+        validation must catch as :class:`LanePoisoned`."""
+        occ = jnp.asarray(self._occupied)
+        self.lane = dataclasses.replace(
+            self.lane, log_r=jnp.where(occ, jnp.nan, self.lane.log_r))
 
     # -- drive ---------------------------------------------------------------
     def step(self) -> int:
         """Refill free lanes, advance the pool one compiled block
         (``steps_per_sync`` transitions), drain completed lanes; returns
-        how many lanes finished in the block."""
+        how many lanes finished in the block.
+
+        Transient step failures (injected or real) are retried with
+        exponential backoff up to ``max_step_retries`` times — the jitted
+        step is a pure function of the lane state, so a retry replays the
+        block bitwise.  Exhausted retries raise a typed
+        :class:`EngineFailure`; malformed drained lanes raise
+        :class:`LanePoisoned` (no retry — device state is already bad).
+        Either way the caller should treat this engine as quarantined.
+        """
         self._fill()
-        self.lane, newly_done = self._jstep(self.lane)
+        attempt = 0
+        while True:
+            try:
+                if self._faults is not None:
+                    for f in self._faults.fires("latency"):
+                        time.sleep(f.latency_s)
+                    if self._faults.fires("lane_state"):
+                        self._poison_occupied_lanes()
+                    self._faults.maybe_raise("engine_step")
+                lane, newly_done = self._jstep(self.lane)
+                break
+            except Exception as e:
+                attempt += 1
+                self.counters["step_retries"] += 1
+                if attempt > self.max_step_retries:
+                    self.counters["step_failures"] += 1
+                    raise EngineFailure(
+                        f"engine step failed after {attempt} attempts "
+                        f"({type(e).__name__}: {e})") from e
+                time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+        self.lane = lane
+        self.counters["blocks"] += 1
         self.steps_run += self.steps_per_sync
         nd = np.asarray(newly_done)
         self._drain(nd)
         return int(nd.sum())
+
+    # -- robustness surface (used by repro.serve.front) -----------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self._pending) or bool(self._occupied.any())
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of lanes currently running a sample."""
+        return float(self._occupied.mean()) if self.num_lanes else 0.0
+
+    def take_results(self) -> Dict[int, EngineResult]:
+        """Return (and clear) the completed results so far — the
+        incremental-drive counterpart of :meth:`run`'s final handoff."""
+        out, self._results = self._results, {}
+        return out
+
+    def progress(self, rid: int) -> Dict[str, int]:
+        """Partial-progress snapshot of an in-flight request."""
+        req = self._requests.get(rid)
+        if req is None:
+            done = rid in self._results
+            return {"collected": (self._results[rid].samples.shape[0]
+                                  if done else 0),
+                    "num_samples": (self._results[rid].samples.shape[0]
+                                    if done else 0),
+                    "complete": done}
+        lanes = int(((np.asarray(self.lane.request_id) == rid)
+                     & self._occupied).sum())
+        return {"collected": len(req["collected"]),
+                "num_samples": req["num_samples"],
+                "lanes_in_flight": lanes, "complete": False}
+
+    def cancel(self, rid: int) -> Dict[str, int]:
+        """Abort an in-flight request: drop its queued samples, reset (and
+        free) its lanes, forget its partial results.  Returns the partial
+        progress it had made — the 504 response's metadata.  Cancelling an
+        unknown/completed request is a no-op returning zeros."""
+        before = len(self._pending)
+        self._pending = deque(s for s in self._pending
+                              if s.request_id != rid)
+        removed = before - len(self._pending)
+        mask = (np.asarray(self.lane.request_id) == rid) & self._occupied
+        lanes_freed = int(mask.sum())
+        if lanes_freed:
+            L, T = self.num_lanes, self.T
+            # _jrefill with request_id=-1 resets the lanes to pristine idle
+            # state (fresh env state + cache rows), so the pool stays
+            # healthy — nothing of the cancelled occupant survives
+            self.lane = self._jrefill(
+                self.lane, jnp.asarray(mask),
+                jnp.zeros((L, T, 2), jnp.uint32),
+                jnp.zeros((L,), jnp.int32),
+                jnp.full((L,), -1, jnp.int32),
+                jnp.ones((L,), jnp.float32),
+                jnp.ones((L,), jnp.float32))
+            self._occupied[mask] = False
+        req = self._requests.pop(rid, None)
+        if req is not None:
+            self.counters["cancelled"] += 1
+        return {"collected": len(req["collected"]) if req else 0,
+                "num_samples": req["num_samples"] if req else 0,
+                "lanes_freed": lanes_freed, "pending_removed": removed}
 
     def run(self) -> Dict[int, EngineResult]:
         """Drive until every submitted request has completed; returns (and
@@ -364,9 +493,8 @@ class SamplingEngine:
             self.step()
             budget -= self.steps_per_sync
             if budget < 0:
-                raise RuntimeError(
+                raise EngineFailure(
                     "engine failed to drain its lane pool within the "
                     "worst-case step budget — an env whose trajectories "
                     "exceed max_steps?")
-        out, self._results = self._results, {}
-        return out
+        return self.take_results()

@@ -15,10 +15,24 @@ the request names a checkpoint (fresh ``policy.init`` otherwise — useful
 for smoke tests and priors).  Engines persist across ``run`` calls, which
 is the point: compilation is paid on the first request of a kind and
 amortized over all subsequent ones.
+
+Robustness surface (used by :mod:`repro.serve.front`):
+
+- engine construction/eviction is lock-guarded, so per-engine-key runner
+  threads can build their engines concurrently;
+- :meth:`Scheduler.evict` quarantines a poisoned engine (the next request
+  for its key rebuilds from scratch);
+- :meth:`Scheduler.refresh_if_stale` rebuilds an engine whose ``step=None``
+  checkpoint directory has grown a newer complete checkpoint — the
+  eviction/refresh path for checkpoints advancing mid-flight;
+- a :class:`~repro.serve.faults.FaultPlan` passed at construction is
+  threaded into every engine (``engine_step``/``latency``/``lane_state``
+  points) and consulted at engine build time (``restore`` point).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+import threading
+from typing import Any, Dict, Iterable, Optional, Tuple
 
 import jax
 
@@ -37,21 +51,41 @@ class Scheduler:
 
     ``num_lanes`` sizes each engine's lane pool; ``init_seed`` seeds env
     params (and fresh policy params for checkpoint-less requests) so
-    scheduler instances are reproducible.
+    scheduler instances are reproducible.  ``fault_plan`` (tests/chaos
+    only) injects deterministic failures; ``max_step_retries`` /
+    ``retry_backoff_s`` configure each engine's transient-failure retry
+    loop.
     """
 
-    def __init__(self, num_lanes: int = 16, init_seed: int = 0):
+    def __init__(self, num_lanes: int = 16, init_seed: int = 0,
+                 fault_plan=None, max_step_retries: int = 2,
+                 retry_backoff_s: float = 0.02):
         self.num_lanes = int(num_lanes)
         self.init_seed = int(init_seed)
+        self.fault_plan = fault_plan
+        self.max_step_retries = int(max_step_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
         self._engines: Dict[Tuple, SamplingEngine] = {}
+        #: per-key metadata for checkpoint refresh: the directory a key's
+        #: engine loaded from, the step it resolved, and whether the
+        #: request pinned the step explicitly (pinned engines never
+        #: auto-refresh)
+        self._engine_meta: Dict[Tuple, Dict[str, Any]] = {}
         self._routes: Dict[int, Tuple[Tuple, int, SampleRequest]] = {}
         self._next_id = 0
+        self._lock = threading.RLock()
 
     # -- engine construction -------------------------------------------------
     def _build_engine(self, req: SampleRequest) -> SamplingEngine:
         from .. import recipes
         from ..envs.registry import get_env, make_env
 
+        if self.fault_plan is not None:
+            # the checkpoint-restore fault point: a firing spec makes this
+            # build raise a typed InjectedFault (the front maps it to a 500
+            # engine_failure); the occurrence counter has advanced, so the
+            # next request's rebuild can succeed
+            self.fault_plan.maybe_raise("restore")
         entry = get_env(req.env)
         if entry.serving == "none":
             raise ValueError(
@@ -64,6 +98,7 @@ class Scheduler:
         recipe = recipes.get(entry.recipe)
         policy = recipe.make_policy(env)
         policy_params = policy.init(jax.random.PRNGKey(self.init_seed))
+        loaded_step = None
         if req.checkpoint is not None:
             from ..checkpoint.manager import CheckpointManager
             mgr = CheckpointManager(req.checkpoint)
@@ -72,18 +107,63 @@ class Scheduler:
                 raise ValueError(
                     f"no complete checkpoint found in {req.checkpoint!r}")
             policy_params = mgr.restore_subtree(step, policy_params)
-        return SamplingEngine(env, env_params, policy, policy_params,
-                              num_lanes=self.num_lanes)
+            loaded_step = int(step)
+        engine = SamplingEngine(env, env_params, policy, policy_params,
+                                num_lanes=self.num_lanes,
+                                fault_plan=self.fault_plan,
+                                max_step_retries=self.max_step_retries,
+                                retry_backoff_s=self.retry_backoff_s)
+        self._engine_meta[_engine_key(req)] = {
+            "checkpoint": req.checkpoint,
+            "step": loaded_step,
+            "pinned": req.step is not None,
+            "rebuilds": self._engine_meta.get(
+                _engine_key(req), {}).get("rebuilds", -1) + 1}
+        return engine
 
     def engine_for(self, req: SampleRequest) -> SamplingEngine:
         key = _engine_key(req)
-        if key not in self._engines:
-            self._engines[key] = self._build_engine(req)
-        return self._engines[key]
+        with self._lock:
+            if key not in self._engines:
+                self._engines[key] = self._build_engine(req)
+            return self._engines[key]
+
+    def evict(self, key: Tuple) -> bool:
+        """Quarantine an engine: drop it so the next request for its key
+        rebuilds from scratch.  Returns whether an engine was dropped."""
+        with self._lock:
+            return self._engines.pop(key, None) is not None
+
+    def checkpoint_step(self, key: Tuple) -> Optional[int]:
+        """The checkpoint step the key's engine loaded (None if fresh-init
+        or the engine was never built)."""
+        with self._lock:
+            return self._engine_meta.get(key, {}).get("step")
+
+    def refresh_if_stale(self, req: SampleRequest) -> Optional[int]:
+        """If ``req``'s engine tracks a checkpoint directory at its latest
+        step (``step=None`` requests) and a newer complete checkpoint has
+        appeared, evict the engine so the next build serves the new params.
+        Returns the newer step if a refresh happened, else None.  Pinned
+        (``step=N``) engines never refresh."""
+        key = _engine_key(req)
+        with self._lock:
+            meta = self._engine_meta.get(key)
+            if (meta is None or meta["checkpoint"] is None or meta["pinned"]
+                    or key not in self._engines):
+                return None
+            from ..checkpoint.manager import CheckpointManager
+            newer = CheckpointManager(meta["checkpoint"]).newer_than(
+                meta["step"])
+            if newer is None:
+                return None
+            del self._engines[key]
+            return int(newer)
 
     @property
     def num_engines(self) -> int:
-        return len(self._engines)
+        with self._lock:
+            return len(self._engines)
 
     # -- request surface -----------------------------------------------------
     def submit(self, req: SampleRequest) -> int:
@@ -98,12 +178,31 @@ class Scheduler:
         self._routes[rid] = (key, local, req)
         return rid
 
-    def run(self) -> Dict[int, SampleResult]:
-        """Drain every engine with queued work; returns completed results
-        keyed by the scheduler-global request ids."""
+    def run(self, only: Optional[Iterable[int]] = None
+            ) -> Dict[int, SampleResult]:
+        """Drain engines with queued work and return completed results
+        keyed by the scheduler-global request ids.
+
+        ``only`` restricts the drain to the engines serving those request
+        ids, so one caller's request doesn't pay for unrelated co-tenant
+        backlogs on other engines; the default drains everything (the CLI
+        path).  Results are returned for every request that completed on a
+        drained engine — co-tenants of the same engine finish together by
+        construction (they share the lane pool)."""
+        if only is None:
+            with self._lock:
+                engines = dict(self._engines)
+            keys = {k for k, e in engines.items() if e.has_work}
+        else:
+            keys = {self._routes[rid][0] for rid in only
+                    if rid in self._routes}
+            with self._lock:
+                engines = {k: self._engines[k] for k in keys
+                           if k in self._engines}
         per_engine: Dict[Tuple, Dict[int, Any]] = {}
-        for key, engine in self._engines.items():
-            if engine._pending or engine._occupied.any():
+        for key in keys:
+            engine = engines.get(key)
+            if engine is not None and engine.has_work:
                 per_engine[key] = engine.run()
         out: Dict[int, SampleResult] = {}
         done = []

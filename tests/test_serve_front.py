@@ -1,0 +1,473 @@
+"""Hardened-front tests: the contract is that *every* request terminates
+with either a correct result or a typed :mod:`repro.serve.errors` error —
+never a hung client — and that every recovery path (retry, quarantine +
+replay, checkpoint refresh) preserves the engine parity contract bitwise.
+
+Layout:
+
+- validation: hard ``SampleRequest.from_dict`` rejection shapes (no JAX);
+- fault plan: deterministic replayable firing (no JAX);
+- hammer: N client threads x M requests across two envs over a real
+  ``ThreadingHTTPServer``, exactly-once, each response bitwise equal to
+  its solo ``forward_rollout``;
+- one test per fault-injection point (``engine_step`` transient and
+  persistent, ``latency`` + deadline, ``lane_state``, ``restore``);
+- one test per typed rejection (408/429/503/504) and for drain,
+  checkpoint refresh, ``Scheduler.run(only=)``, and the legacy handler's
+  structured 500.
+"""
+import json
+import threading
+import time
+from http.client import HTTPConnection
+from http.server import HTTPServer
+
+import jax
+import numpy as np
+import pytest
+
+from repro import recipes
+from repro.core.rollout import forward_rollout
+from repro.envs.registry import make_env
+from repro.serve import (BadRequest, DeadlineExceeded, EngineFailure,
+                         FaultPlan, FaultSpec, QueueFull, QueueTimeout,
+                         SampleRequest, Scheduler, ServeFront, ShuttingDown,
+                         TooManyRequests, make_server)
+from repro.serve.api import make_handler
+
+BITSEQ = dict(env="bitseq", overrides={"n": 16, "k": 4})
+GRID = dict(env="hypergrid", overrides={"dim": 2, "side": 6})
+
+
+def _reference(envspec, seed, num_samples):
+    """Solo forward_rollout for a request — the parity oracle."""
+    env = make_env(envspec["env"], **envspec["overrides"])
+    env_params = env.init(jax.random.PRNGKey(0))
+    from repro.envs.registry import get_env
+    policy = recipes.get(get_env(envspec["env"]).recipe).make_policy(env)
+    policy_params = policy.init(jax.random.PRNGKey(0))
+    return forward_rollout(jax.random.PRNGKey(seed), env, env_params,
+                           policy, policy_params, num_samples)
+
+
+# ---------------------------------------------------------------------------
+# validation + fault-plan determinism (no JAX)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("doc,needle", [
+    ([1, 2], "JSON object"),
+    ({"env": "bitseq", "bogus": 1}, "bogus"),
+    ({"num_samples": 2}, "'env'"),
+    ({"env": "bitseq", "num_samples": 0}, "num_samples"),
+    ({"env": "bitseq", "num_samples": 10**9}, "num_samples"),
+    ({"env": "bitseq", "num_samples": True}, "num_samples"),
+    ({"env": "bitseq", "logit_temp": float("nan")}, "logit_temp"),
+    ({"env": "bitseq", "reward_beta": -1.0}, "reward_beta"),
+    ({"env": "bitseq", "transforms": "not-a-list"}, "transforms"),
+    ({"env": "bitseq", "seed": "seven"}, "seed"),
+    ({"env": "bitseq", "deadline_s": 0.0}, "deadline_s"),
+    ({"env": "bitseq", "deadline_s": float("inf")}, "deadline_s"),
+])
+def test_from_dict_rejects_with_named_field(doc, needle):
+    with pytest.raises(BadRequest, match=needle):
+        SampleRequest.from_dict(doc)
+    # BadRequest stays a ValueError for legacy except-paths
+    with pytest.raises(ValueError):
+        SampleRequest.from_dict(doc)
+
+
+def test_from_dict_accepts_full_request():
+    req = SampleRequest.from_dict(
+        {"env": "bitseq", "num_samples": 3, "seed": 5, "logit_temp": 0.8,
+         "reward_beta": 2.0, "transforms": [], "overrides": {"n": 16},
+         "checkpoint": None, "step": None, "deadline_s": 30.0})
+    assert req.num_samples == 3 and req.deadline_s == 30.0
+
+
+def test_fault_plan_is_deterministic_and_replayable():
+    specs = [FaultSpec("engine_step", at=(2,), rate=0.3),
+             FaultSpec("latency", rate=0.5, latency_s=0.01)]
+    a, b = FaultPlan(specs, seed=123), FaultPlan(specs, seed=123)
+    fa = [(bool(a.fires("engine_step")), bool(a.fires("latency")))
+          for _ in range(64)]
+    fb = [(bool(b.fires("engine_step")), bool(b.fires("latency")))
+          for _ in range(64)]
+    assert fa == fb                       # same seed => identical schedule
+    assert fa[2][0]                       # explicit at=(2,) always fires
+    c = FaultPlan(specs, seed=124)
+    fc = [(bool(c.fires("engine_step")), bool(c.fires("latency")))
+          for _ in range(64)]
+    assert fa != fc                       # different seed => different draws
+    assert a.stats()["engine_step"]["consulted"] == 64
+
+
+def test_legacy_handler_returns_structured_500_on_missing_result():
+    """The legacy do_POST guard: a scheduler that drains without producing
+    the request's result must answer a structured 500, not a dropped
+    connection or KeyError traceback."""
+
+    class StubScheduler:
+        def submit(self, req):
+            return 42
+
+        def run(self, only=None):
+            return {}                     # result went missing
+
+    server = HTTPServer(("127.0.0.1", 0), make_handler(StubScheduler()))
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    try:
+        conn = HTTPConnection("127.0.0.1", server.server_address[1],
+                              timeout=30)
+        conn.request("POST", "/sample",
+                     json.dumps({"env": "bitseq", "num_samples": 1}),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        assert resp.status == 500
+        doc = json.loads(resp.read())
+        assert doc["kind"] == "engine_failure"
+        assert "no result" in doc["error"]
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+# ---------------------------------------------------------------------------
+# the hammer: concurrent HTTP clients, two envs, bitwise exactly-once
+# ---------------------------------------------------------------------------
+
+def test_hammer_concurrent_clients_bitwise_exactly_once():
+    front = ServeFront(Scheduler(num_lanes=3), checkpoint_poll_s=None)
+    server = make_server(front, port=0)
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    port = server.server_address[1]
+    n_threads, n_per = 4, 3
+    results, errors = {}, []
+    lock = threading.Lock()
+
+    def client(tid):
+        conn = HTTPConnection("127.0.0.1", port, timeout=300)
+        for j in range(n_per):
+            envspec = BITSEQ if (tid + j) % 2 == 0 else GRID
+            seed = 100 + tid * n_per + j
+            body = json.dumps({"env": envspec["env"], "num_samples": 2,
+                               "seed": seed,
+                               "overrides": envspec["overrides"]})
+            try:
+                conn.request("POST", "/sample", body,
+                             {"Content-Type": "application/json"})
+                resp = conn.getresponse()
+                doc = json.loads(resp.read())
+                with lock:
+                    if resp.status != 200:
+                        errors.append((seed, resp.status, doc))
+                    else:
+                        results[(envspec["env"], seed)] = doc
+            except Exception as e:  # a hung/dropped client is the bug
+                with lock:
+                    errors.append((seed, "exception", repr(e)))
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=600)
+    try:
+        assert not errors, f"hammer errors: {errors}"
+        assert len(results) == n_threads * n_per     # exactly once, all back
+        # every response is bitwise its solo forward_rollout
+        for envspec in (BITSEQ, GRID):
+            seeds = sorted(s for (e, s) in results if e == envspec["env"])
+            for seed in seeds:
+                ref = _reference(envspec, seed, 2)
+                doc = results[(envspec["env"], seed)]
+                assert np.array_equal(np.asarray(doc["samples"]),
+                                      np.asarray(ref.obs[-1]))
+                assert np.allclose(doc["log_rewards"],
+                                   np.asarray(ref.log_reward))
+        # observability: healthz + stats reflect the load just served
+        conn = HTTPConnection("127.0.0.1", port, timeout=30)
+        conn.request("GET", "/healthz")
+        hz = json.loads(conn.getresponse().read())
+        assert hz["status"] == "ok" and hz["runners"] == 2
+        conn.request("GET", "/stats")
+        st = json.loads(conn.getresponse().read())
+        assert st["counters"]["submitted"] == n_threads * n_per
+        assert sum(r["completed"] for r in st["engines"]) \
+            == n_threads * n_per
+    finally:
+        server.shutdown()
+        server.server_close()
+        front.shutdown(drain=True, timeout=30)
+
+
+# ---------------------------------------------------------------------------
+# fault-injection points
+# ---------------------------------------------------------------------------
+
+def test_transient_step_fault_is_retried_bitwise():
+    """One injected engine_step failure: retried with backoff inside the
+    engine, result still bitwise, retry visible in counters."""
+    sched = Scheduler(num_lanes=3)
+    front = ServeFront(sched, checkpoint_poll_s=None)
+    req = SampleRequest(num_samples=3, seed=21, **BITSEQ)
+    try:
+        front.request(req)                # build + compile, faultless
+        key = next(iter(sched._engines))
+        engine = sched._engines[key]
+        engine._faults = FaultPlan.single("engine_step",
+                                          at=(engine._faults.occurrence(
+                                              "engine_step"),)
+                                          if engine._faults else (0,))
+        res = front.request(SampleRequest(num_samples=3, seed=22, **BITSEQ))
+        ref = _reference(BITSEQ, 22, 3)
+        assert np.array_equal(np.asarray(res.samples),
+                              np.asarray(ref.obs[-1]))
+        assert engine.counters["step_retries"] >= 1
+        assert engine.counters["step_failures"] == 0
+    finally:
+        front.shutdown(drain=True, timeout=30)
+
+
+def test_persistent_step_fault_quarantines_and_replays_bitwise():
+    """Retries exhausted => quarantine: evict, rebuild, replay.  The
+    replayed result is bitwise identical to an undisturbed run."""
+    plan = FaultPlan.single("engine_step", at=(0, 1, 2, 3))
+    sched = Scheduler(num_lanes=3, fault_plan=plan, max_step_retries=1,
+                      retry_backoff_s=0.001)
+    front = ServeFront(sched, checkpoint_poll_s=None)
+    try:
+        res = front.request(SampleRequest(num_samples=3, seed=31, **BITSEQ))
+        ref = _reference(BITSEQ, 31, 3)
+        assert np.array_equal(np.asarray(res.samples),
+                              np.asarray(ref.obs[-1]))
+        assert np.allclose(res.log_rewards, np.asarray(ref.log_reward))
+        st = front.stats()
+        assert st["counters"]["evictions"] >= 1
+        assert st["counters"]["replays"] >= 1
+    finally:
+        front.shutdown(drain=True, timeout=30)
+
+
+def test_lane_poison_fault_quarantines_and_replays_bitwise():
+    """lane_state fault NaNs occupied lanes; drain-time validation raises
+    LanePoisoned, the front rebuilds and replays — later requests and the
+    replayed one are unaffected, bitwise."""
+    plan = FaultPlan.single("lane_state", at=(0,))
+    sched = Scheduler(num_lanes=3, fault_plan=plan)
+    front = ServeFront(sched, checkpoint_poll_s=None)
+    try:
+        res = front.request(SampleRequest(num_samples=3, seed=41, **BITSEQ))
+        ref = _reference(BITSEQ, 41, 3)
+        assert np.array_equal(np.asarray(res.samples),
+                              np.asarray(ref.obs[-1]))
+        assert all(np.isfinite(res.log_rewards))
+        assert front.stats()["counters"]["evictions"] >= 1
+        res2 = front.request(SampleRequest(num_samples=2, seed=42, **BITSEQ))
+        ref2 = _reference(BITSEQ, 42, 2)
+        assert np.array_equal(np.asarray(res2.samples),
+                              np.asarray(ref2.obs[-1]))
+    finally:
+        front.shutdown(drain=True, timeout=30)
+
+
+def test_restore_fault_fails_typed_then_recovers():
+    """A restore (engine-build) fault fails that request with a typed 500;
+    the next request rebuilds successfully."""
+    plan = FaultPlan.single("restore", at=(0,))
+    sched = Scheduler(num_lanes=3, fault_plan=plan)
+    front = ServeFront(sched, checkpoint_poll_s=None)
+    try:
+        with pytest.raises(EngineFailure, match="injected fault"):
+            front.request(SampleRequest(num_samples=2, seed=51, **BITSEQ))
+        res = front.request(SampleRequest(num_samples=2, seed=51, **BITSEQ))
+        ref = _reference(BITSEQ, 51, 2)
+        assert np.array_equal(np.asarray(res.samples),
+                              np.asarray(ref.obs[-1]))
+    finally:
+        front.shutdown(drain=True, timeout=30)
+
+
+def test_deadline_mid_execution_returns_504_with_partial_progress():
+    """latency faults slow every block; a short deadline expires
+    mid-execution => 504 carrying partial-progress metadata, lanes freed."""
+    plan = FaultPlan([FaultSpec("latency", rate=1.0, latency_s=0.25)],
+                     seed=7)
+    sched = Scheduler(num_lanes=3, fault_plan=plan)
+    front = ServeFront(sched, checkpoint_poll_s=None)
+    try:
+        # compile first so the deadline races engine work, not XLA
+        front.request(SampleRequest(num_samples=1, seed=61, **BITSEQ))
+        # 9 samples through 3 lanes = 3 refill waves; with every block
+        # sleeping 0.25s the 0.3s deadline expires mid-execution
+        with pytest.raises(DeadlineExceeded) as ei:
+            front.request(SampleRequest(num_samples=9, seed=62, **BITSEQ),
+                          deadline_s=0.3)
+        err = ei.value
+        assert err.code == 504
+        assert err.extra["num_samples"] == 9
+        assert 0 <= err.extra["collected"] < 9
+        assert err.extra["elapsed_s"] >= 0.3
+        # the pool recovered: the next request completes bitwise
+        res = front.request(SampleRequest(num_samples=2, seed=63, **BITSEQ))
+        ref = _reference(BITSEQ, 63, 2)
+        assert np.array_equal(np.asarray(res.samples),
+                              np.asarray(ref.obs[-1]))
+    finally:
+        front.shutdown(drain=True, timeout=30)
+
+
+# ---------------------------------------------------------------------------
+# typed rejections: 408 / 429 / 503 / drain
+# ---------------------------------------------------------------------------
+
+def test_deadline_expired_in_queue_returns_408():
+    sched = Scheduler(num_lanes=3)
+    front = ServeFront(sched, checkpoint_poll_s=None)
+    try:
+        with pytest.raises(QueueTimeout) as ei:
+            front.request(SampleRequest(num_samples=1, seed=71, **BITSEQ),
+                          deadline_s=1e-6)
+        assert ei.value.code == 408
+        assert "queued_s" in ei.value.extra
+    finally:
+        front.shutdown(drain=True, timeout=30)
+
+
+def test_per_client_inflight_cap_returns_429():
+    plan = FaultPlan([FaultSpec("latency", rate=1.0, latency_s=0.2)],
+                     seed=3)
+    sched = Scheduler(num_lanes=3, fault_plan=plan)
+    front = ServeFront(sched, checkpoint_poll_s=None,
+                       max_inflight_per_client=1)
+    try:
+        fut = front.submit(SampleRequest(num_samples=2, seed=81, **BITSEQ),
+                           client="10.0.0.1")
+        with pytest.raises(TooManyRequests) as ei:
+            front.submit(SampleRequest(num_samples=2, seed=82, **BITSEQ),
+                         client="10.0.0.1")
+        assert ei.value.code == 429
+        # a different client is unaffected
+        fut2 = front.submit(SampleRequest(num_samples=2, seed=83, **BITSEQ),
+                            client="10.0.0.2")
+        assert fut.result(timeout=300) is not None
+        assert fut2.result(timeout=300) is not None
+        # the cap releases once the future resolves
+        fut3 = front.submit(SampleRequest(num_samples=1, seed=84, **BITSEQ),
+                            client="10.0.0.1")
+        assert fut3.result(timeout=300) is not None
+    finally:
+        front.shutdown(drain=True, timeout=30)
+
+
+def test_full_queue_returns_503_with_retry_after():
+    plan = FaultPlan([FaultSpec("latency", rate=1.0, latency_s=0.4)],
+                     seed=5)
+    sched = Scheduler(num_lanes=3, fault_plan=plan)
+    front = ServeFront(sched, max_queue=1, checkpoint_poll_s=None)
+    futs = []
+    try:
+        # r1 gets admitted into the (slow) engine; r2 fills the queue
+        futs.append(front.submit(
+            SampleRequest(num_samples=2, seed=91, **BITSEQ)))
+        time.sleep(0.3)                 # let the runner pull r1 off the queue
+        futs.append(front.submit(
+            SampleRequest(num_samples=2, seed=92, **BITSEQ)))
+        with pytest.raises(QueueFull) as ei:
+            front.submit(SampleRequest(num_samples=2, seed=93, **BITSEQ))
+        assert ei.value.code == 503
+        assert ei.value.retry_after_s > 0
+        assert "Retry-After" in ei.value.headers()
+    finally:
+        for f in futs:
+            f.result(timeout=300)       # backpressure never loses a request
+        front.shutdown(drain=True, timeout=30)
+
+
+def test_drain_finishes_inflight_then_rejects_new_work():
+    plan = FaultPlan([FaultSpec("latency", rate=1.0, latency_s=0.1)],
+                     seed=9)
+    sched = Scheduler(num_lanes=3, fault_plan=plan)
+    front = ServeFront(sched, checkpoint_poll_s=None)
+    fut = front.submit(SampleRequest(num_samples=2, seed=95, **BITSEQ))
+    report = front.shutdown(drain=True, timeout=120)
+    assert report["drained"] and report["runners_joined"] == 1
+    res = fut.result(timeout=1)         # in-flight work was flushed
+    ref = _reference(BITSEQ, 95, 2)
+    assert np.array_equal(np.asarray(res.samples), np.asarray(ref.obs[-1]))
+    with pytest.raises(ShuttingDown):   # and no new work is admitted
+        front.submit(SampleRequest(num_samples=1, seed=96, **BITSEQ))
+    assert front.healthz()["status"] == "draining"
+
+
+# ---------------------------------------------------------------------------
+# checkpoint refresh + scheduler satellites
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_advance_refreshes_engine(tmp_path):
+    """Training publishes a newer checkpoint mid-serve: the engine is
+    evicted and rebuilt at the new step; requests after the refresh are
+    served by the new params."""
+    from repro.checkpoint.manager import CheckpointManager
+
+    sched0 = Scheduler(num_lanes=3)
+    e0 = sched0.engine_for(SampleRequest(num_samples=1, seed=0, **BITSEQ))
+    pp0 = e0._policy_params
+    pp1 = jax.tree.map(lambda x: x + 0.25, pp0)
+    mgr = CheckpointManager(str(tmp_path), keep=4)
+    mgr.save(1, {".train": {".params": pp0}})
+
+    sched = Scheduler(num_lanes=3)
+    front = ServeFront(sched, checkpoint_poll_s=0.05)
+    req = SampleRequest(num_samples=2, seed=11, checkpoint=str(tmp_path),
+                        **BITSEQ)
+    try:
+        r0 = front.request(req)
+        key = next(iter(sched._engines))
+        assert sched.checkpoint_step(key) == 1
+        mgr.save(2, {".train": {".params": pp1}})
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline:
+            if front.stats()["counters"].get("checkpoint_refreshes", 0) >= 1:
+                break
+            time.sleep(0.02)
+        else:
+            pytest.fail("checkpoint refresh never observed")
+        r1 = front.request(req)         # immediately: must get new params
+        meta = sched._engine_meta[key]
+        assert meta["step"] == 2 and meta["rebuilds"] >= 1
+        served = sched._engines[key]._policy_params
+        for a, b in zip(jax.tree.leaves(served), jax.tree.leaves(pp1)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert r1.samples != r0.samples  # params moved; samples follow
+    finally:
+        front.shutdown(drain=True, timeout=30)
+
+
+def test_pinned_step_never_refreshes(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+
+    sched0 = Scheduler(num_lanes=3)
+    e0 = sched0.engine_for(SampleRequest(num_samples=1, seed=0, **BITSEQ))
+    pp0 = e0._policy_params
+    mgr = CheckpointManager(str(tmp_path), keep=4)
+    mgr.save(1, {".train": {".params": pp0}})
+    sched = Scheduler(num_lanes=3)
+    req = SampleRequest(num_samples=1, seed=1, checkpoint=str(tmp_path),
+                        step=1, **BITSEQ)
+    sched.engine_for(req)
+    mgr.save(2, {".train": {".params": pp0}})
+    assert sched.refresh_if_stale(req) is None     # pinned: no refresh
+    key = next(iter(sched._engines))
+    assert sched.checkpoint_step(key) == 1
+
+
+def test_scheduler_run_only_drains_just_that_engine():
+    sched = Scheduler(num_lanes=3)
+    r_bit = sched.submit(SampleRequest(num_samples=2, seed=1, **BITSEQ))
+    r_grid = sched.submit(SampleRequest(num_samples=2, seed=1, **GRID))
+    assert sched.num_engines == 2
+    out = sched.run(only=(r_bit,))
+    assert r_bit in out and r_grid not in out
+    out2 = sched.run()                  # default drains the rest
+    assert r_grid in out2
