@@ -48,6 +48,13 @@ def main(argv=None) -> int:
                     help="seeds the fault schedule AND the request mix")
     ap.add_argument("--clients", type=int, default=6)
     ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--plan", default=None,
+                    choices=("single", "data_parallel"),
+                    help="engine lane-pool execution plan (data_parallel "
+                         "runs the whole chaos suite on shard_map'd "
+                         "engines; needs forced virtual devices on CPU)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="device count for --plan data_parallel")
     args = ap.parse_args(argv)
 
     import numpy as np
@@ -69,7 +76,8 @@ def main(argv=None) -> int:
         FaultSpec("restore", rate=0.15),
     ], seed=args.seed)
     sched = Scheduler(num_lanes=args.lanes, fault_plan=plan,
-                      max_step_retries=2, retry_backoff_s=0.005)
+                      max_step_retries=2, retry_backoff_s=0.005,
+                      plan=args.plan, devices=args.devices)
     front = ServeFront(sched, max_queue=16, checkpoint_poll_s=0.2,
                        hard_timeout_s=120.0)
 

@@ -119,6 +119,10 @@ class ExecutionPlan:
         return 1
 
     @property
+    def num_shards(self) -> int:
+        return 1
+
+    @property
     def mesh_shape(self) -> Optional[Tuple[int, ...]]:
         return None
 

@@ -113,6 +113,25 @@ def rollout_batch_specs(axis: str, lead: int = 0):
         log_r_state=t(1), energy=t(1), log_pf_beh=t(1))
 
 
+def lane_state_specs(axis: str):
+    """PartitionSpec prefix tree sharding a serving ``LaneState`` over ``axis``.
+
+    The lane pool of :class:`repro.serve.SamplingEngine` is lane-major:
+    every field carries the lane axis at position 0 except the stacked
+    KV-cache leaves, whose layout is (num_layers, B, ...) — lane axis at
+    position 1 (see PR 7's fused decode step).  Specs are *prefixes*: the
+    single ``P`` leaf for ``env_state`` fans out over whatever pytree the
+    environment keeps, and the cache spec matches the empty ``()`` cache of
+    uncached policies vacuously.
+    """
+    from ..serve.engine import LaneState
+    lane = P(axis)
+    return LaneState(
+        env_state=lane, cache=P(None, axis), prev_action=lane,
+        step_keys=lane, env_id=lane, request_id=lane, t=lane,
+        logit_temp=lane, reward_beta=lane, log_r=lane)
+
+
 def _batch_ok(mesh, b: int) -> Optional[Tuple]:
     axes = batch_spec(mesh)
     total = 1

@@ -76,7 +76,35 @@ def main(argv=None) -> int:
                     help="checkpoint step (default: latest complete)")
     ap.add_argument("--lanes", type=int, default=16,
                     help="engine lane-pool size (static batch of the "
-                         "compiled step)")
+                         "compiled step; rounded up to a multiple of the "
+                         "plan's shard count)")
+    ap.add_argument("--plan", default=None,
+                    choices=("single", "data_parallel"),
+                    help="execution plan for every engine's lane pool: "
+                         "data_parallel shards lanes over the device mesh "
+                         "via shard_map, bitwise-identical samples "
+                         "(default: REPRO_SERVE_PLAN env var, else single)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="device count for --plan data_parallel "
+                         "(default: REPRO_SERVE_DEVICES env var, else all "
+                         "visible devices)")
+    ap.add_argument("--dedup-cache", type=int, default=64, metavar="N",
+                    help="per-engine LRU of recent results served to "
+                         "requests identical under the parity contract "
+                         "(env, transforms, checkpoint step, seed, temps, "
+                         "num_samples); 0 disables dedup")
+    ap.add_argument("--autosize", action="store_true",
+                    help="grow/shrink each engine's lane pool between "
+                         "requests across power-of-two buckets sized to "
+                         "the EWMA arrival-rate demand estimate")
+    ap.add_argument("--min-lanes", type=int, default=2,
+                    help="autosizing lower bucket bound")
+    ap.add_argument("--max-lanes", type=int, default=None,
+                    help="autosizing upper bucket bound (default: "
+                         "max(64, --lanes))")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="compile every autosize bucket at engine build "
+                         "so mid-serve resizes never pay XLA")
     ap.add_argument("--json", action="store_true",
                     help="print the SampleResult as JSON instead of a "
                          "summary")
@@ -116,7 +144,9 @@ def main(argv=None) -> int:
     from ..serve import SampleRequest, Scheduler, ServeFront, make_server
 
     sched = Scheduler(num_lanes=args.lanes,
-                      max_step_retries=args.retries)
+                      max_step_retries=args.retries,
+                      plan=args.plan, devices=args.devices,
+                      dedup_cache_size=args.dedup_cache)
     if args.http:
         if args.single_thread:
             target = sched
@@ -126,7 +156,9 @@ def main(argv=None) -> int:
                 default_deadline_s=args.deadline,
                 max_num_samples=args.max_samples,
                 max_inflight_per_client=args.max_inflight_per_client,
-                checkpoint_poll_s=(args.checkpoint_poll or None))
+                checkpoint_poll_s=(args.checkpoint_poll or None),
+                autosize=args.autosize, min_lanes=args.min_lanes,
+                max_lanes=args.max_lanes, prewarm_lanes=args.prewarm)
         server = make_server(target, host=args.host, port=args.port)
         threaded = not args.single_thread
         print(f"serving on http://{args.host}:{args.port}  "

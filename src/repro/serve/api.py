@@ -152,7 +152,9 @@ class SampleResult:
     ``samples[i]`` is sample i's terminal observation (token grid /
     coordinates — the same layout ``RolloutBatch.obs[-1]`` rows carry);
     ``steps[i]`` its trajectory length; ``latency_s`` the submit-to-drain
-    wall time inside the engine.
+    wall time inside the engine.  ``deduped`` marks results served from an
+    identical request's computation (in-flight fan-out or engine LRU) —
+    bitwise equal to recomputing, by the engine's parity contract.
     """
     request_id: int
     env: str
@@ -160,6 +162,7 @@ class SampleResult:
     log_rewards: list
     steps: list
     latency_s: float
+    deduped: bool = False
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -173,7 +176,8 @@ def result_from_engine(request: SampleRequest, engine_result,
         samples=engine_result.samples.tolist(),
         log_rewards=[float(x) for x in engine_result.log_rewards],
         steps=[int(x) for x in engine_result.steps],
-        latency_s=float(engine_result.latency_s))
+        latency_s=float(engine_result.latency_s),
+        deduped=bool(getattr(engine_result, "dedup", False)))
 
 
 # ---------------------------------------------------------------------------

@@ -37,10 +37,20 @@ layer the ROADMAP's "heavy traffic" story needs:
   ``repro.launch.serve``) stops admitting (503 ``shutting_down``),
   finishes in-flight lanes, flushes every response, and joins the runner
   threads.
+- **Lane-pool autosizing.**  With ``autosize=True`` each runner tracks an
+  EWMA of its arrival rate, service time, and request size; between
+  requests (never under an occupied pool) it resizes its engine across
+  power-of-two lane-count buckets sized to the estimated demand
+  (Little's law: arrivals/s x service time x samples/request, or the
+  samples already queued, whichever is larger).  Buckets bound the number
+  of distinct compiled shapes, and ``prewarm_lanes=True`` pays all their
+  compiles at engine build so resizes mid-serve never hit XLA.  The
+  engine's parity contract is lane-count-invariant, so results are
+  unaffected.
 - **Observability.**  :meth:`healthz` and :meth:`stats` expose drain
-  state, queue depths, lane occupancy, per-engine latency percentiles,
-  and retry/eviction/replay counters — degradation is visible, not
-  silent.
+  state, queue depths, lane occupancy, arrival-rate estimates, per-engine
+  latency percentiles, and retry/eviction/replay/dedup counters —
+  degradation is visible, not silent.
 
 Every request terminates with either a correct result or a typed
 :mod:`repro.serve.errors` error; ``tests/test_serve_front.py`` and the
@@ -120,9 +130,14 @@ class _EngineRunner(threading.Thread):
         self.stop_after_drain = threading.Event()
         self.counters = {"admitted": 0, "completed": 0, "deadline_504": 0,
                          "queue_408": 0, "rebuilds": 0, "replayed": 0,
-                         "refreshes": 0}
+                         "refreshes": 0, "autosize_resizes": 0}
         self._latencies: List[float] = []
         self._ewma_s = 0.5                     # request service-time EWMA
+        self._arrival_rate = 0.0               # requests/s EWMA
+        self._avg_samples = 4.0                # samples/request EWMA
+        self._queued_samples = 0               # submitted, not yet admitted
+        self._last_arrival: Optional[float] = None
+        self._prewarmed = False
         self._consec_build_failures = 0
         self._refresh_pending = False
         self._last_poll = time.monotonic()
@@ -142,10 +157,60 @@ class _EngineRunner(threading.Thread):
             ewma = self._ewma_s
         return max(0.1, ewma * (self.queue.qsize() + 1))
 
+    def note_arrival(self, num_samples: int) -> None:
+        """Fold one accepted submission into the demand estimators that
+        drive :meth:`_maybe_autosize` (called from the front's submit
+        path, so instantaneous rates are clamped against burst spikes)."""
+        now = time.monotonic()
+        with self._lock:
+            if self._last_arrival is not None:
+                dt = max(1e-3, now - self._last_arrival)
+                inst = min(1e3, 1.0 / dt)
+                self._arrival_rate += 0.3 * (inst - self._arrival_rate)
+            self._last_arrival = now
+            self._avg_samples += 0.3 * (num_samples - self._avg_samples)
+            self._queued_samples += int(num_samples)
+
+    def _maybe_autosize(self) -> None:
+        """Grow/shrink the lane pool between requests: pick the
+        power-of-two bucket covering the demand estimate — the samples
+        already queued, or Little's law (arrival rate x service-time EWMA
+        x samples/request) while traffic flows — clamped to
+        [min_lanes, max_lanes].  Only runs on an idle pool (resize
+        refuses occupied lanes), so in-flight work is never disturbed;
+        parity is lane-count-invariant, so results are unaffected."""
+        front = self.front
+        engine = self.engine
+        if not front.autosize or engine is None or self.inflight \
+                or engine.has_work:
+            return
+        now = time.monotonic()
+        with self._lock:
+            queued = self._queued_samples
+            lam = self._arrival_rate
+            if self._last_arrival is not None:
+                # the EWMA only folds on arrivals; while traffic is quiet
+                # the observed rate can't exceed 1/idle-gap, so clamp it —
+                # otherwise a past burst pins the pool large forever
+                lam = min(lam, 1.0 / max(1e-3, now - self._last_arrival))
+            demand = max(float(queued),
+                         lam * self._ewma_s * self._avg_samples, 1.0)
+        bucket = 1 << max(0, math.ceil(math.log2(demand)))
+        bucket = max(front.min_lanes, min(front.max_lanes, bucket))
+        try:
+            if engine.resize(bucket):
+                with self._lock:
+                    self.counters["autosize_resizes"] += 1
+                front.count("autosize_resizes")
+        except Exception:
+            pass        # a racing admit occupied the pool; next idle tick
+
     def stats(self) -> Dict[str, Any]:
         with self._lock:
             lat = list(self._latencies)
             counters = dict(self.counters)
+            arrival = self._arrival_rate
+            queued_samples = self._queued_samples
         eng = self.engine
         doc: Dict[str, Any] = {
             "env": self.template.env,
@@ -153,6 +218,8 @@ class _EngineRunner(threading.Thread):
             "queue_depth": self.queue.qsize(),
             "inflight_requests": len(self.inflight),
             "dead": self.dead,
+            "arrival_rate_hz": round(arrival, 3),
+            "queued_samples": queued_samples,
             **counters,
         }
         if lat:
@@ -190,6 +257,7 @@ class _EngineRunner(threading.Thread):
             if not self.inflight:
                 self._apply_pending_refresh()
                 self._maybe_poll_checkpoint()
+                self._maybe_autosize()
                 try:
                     item = self.queue.get(timeout=0.05)
                 except queue.Empty:
@@ -252,6 +320,9 @@ class _EngineRunner(threading.Thread):
         # (after _apply_pending_refresh already ran); apply it now so an
         # idle pool never admits onto params the scheduler has evicted
         self._apply_pending_refresh()
+        with self._lock:
+            self._queued_samples = max(
+                0, self._queued_samples - item.req.num_samples)
         now = time.monotonic()
         if item.deadline is not None and now >= item.deadline:
             with self._lock:
@@ -286,6 +357,16 @@ class _EngineRunner(threading.Thread):
             self.engine = self.front.scheduler.engine_for(self.template)
             self._consec_build_failures = 0
             self._blocks_since_progress = 0
+            if self.front.autosize and self.front.prewarm_lanes \
+                    and not self._prewarmed:
+                # pay every autosize bucket's compile now, so mid-serve
+                # resizes never hit XLA (best-effort: a failure here just
+                # means lazier compilation later)
+                self._prewarmed = True
+                try:
+                    self.engine.prewarm(self.front.autosize_buckets())
+                except Exception:
+                    pass
             return True
         except Exception as e:
             self._consec_build_failures += 1
@@ -423,6 +504,12 @@ class ServeFront:
         backlog is failed fast.
     hard_timeout_s: absolute ceiling on :meth:`request` waits — the
         never-hang backstop for deadline-less requests.
+    autosize: let runners grow/shrink their engines' lane pools between
+        requests, across power-of-two buckets in [min_lanes, max_lanes]
+        sized to the EWMA demand estimate (see the module docs).
+    min_lanes / max_lanes: autosizing bucket bounds (max_lanes defaults
+        to max(64, the scheduler's num_lanes)).
+    prewarm_lanes: compile every autosize bucket at engine build time.
     """
 
     def __init__(self, scheduler: Optional[Scheduler] = None, *,
@@ -432,9 +519,16 @@ class ServeFront:
                  max_inflight_per_client: Optional[int] = None,
                  checkpoint_poll_s: Optional[float] = 1.0,
                  max_rebuilds: int = 2, fault_plan=None,
-                 hard_timeout_s: float = 600.0):
+                 hard_timeout_s: float = 600.0, autosize: bool = False,
+                 min_lanes: int = 2, max_lanes: Optional[int] = None,
+                 prewarm_lanes: bool = False):
         self.scheduler = scheduler if scheduler is not None else Scheduler(
             num_lanes=num_lanes, fault_plan=fault_plan)
+        self.autosize = bool(autosize)
+        self.min_lanes = max(1, int(min_lanes))
+        self.max_lanes = (int(max_lanes) if max_lanes is not None
+                          else max(64, self.scheduler.num_lanes))
+        self.prewarm_lanes = bool(prewarm_lanes)
         self.max_queue = int(max_queue)
         self.default_deadline_s = default_deadline_s
         self.max_num_samples = int(max_num_samples)
@@ -450,6 +544,17 @@ class ServeFront:
         self._t0 = time.monotonic()
 
     # -- bookkeeping ---------------------------------------------------------
+    def autosize_buckets(self) -> List[int]:
+        """The power-of-two lane-count buckets autosizing moves between —
+        the set :meth:`_EngineRunner._maybe_autosize` picks from and
+        ``prewarm_lanes`` compiles up front."""
+        out, b = [], 1
+        while b <= self.max_lanes:
+            if b >= self.min_lanes:
+                out.append(b)
+            b *= 2
+        return out or [self.min_lanes]
+
     def count(self, name: str, by: int = 1) -> None:
         with self._lock:
             self._counters[name] = self._counters.get(name, 0) + by
@@ -513,6 +618,7 @@ class ServeFront:
                 f"admission queue for env {req.env!r} is full "
                 f"({self.max_queue} requests); retry later",
                 retry_after_s=runner.retry_after_estimate())
+        runner.note_arrival(req.num_samples)
         self.count("submitted")
         return item.future
 

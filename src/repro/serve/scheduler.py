@@ -55,16 +55,35 @@ class Scheduler:
     only) injects deterministic failures; ``max_step_retries`` /
     ``retry_backoff_s`` configure each engine's transient-failure retry
     loop.
+
+    ``plan`` / ``devices`` pick the execution plan every engine shards its
+    lane pool under (``"single"`` or ``"data_parallel"``; the
+    ``REPRO_SERVE_PLAN`` / ``REPRO_SERVE_DEVICES`` env vars supply
+    defaults, so CI can force the sharded path without touching call
+    sites).  ``dedup_cache_size`` bounds each engine's LRU of recent
+    results served to duplicate requests (0 disables dedup) — the
+    scheduler default is **on**, because serving-tier duplicates are the
+    common case the paper's throughput story cares about.
     """
 
     def __init__(self, num_lanes: int = 16, init_seed: int = 0,
                  fault_plan=None, max_step_retries: int = 2,
-                 retry_backoff_s: float = 0.02):
+                 retry_backoff_s: float = 0.02, plan=None,
+                 devices: Optional[int] = None, dedup_cache_size: int = 64):
+        import os
         self.num_lanes = int(num_lanes)
         self.init_seed = int(init_seed)
         self.fault_plan = fault_plan
         self.max_step_retries = int(max_step_retries)
         self.retry_backoff_s = float(retry_backoff_s)
+        if plan is None:
+            plan = os.environ.get("REPRO_SERVE_PLAN") or None
+        if devices is None and os.environ.get("REPRO_SERVE_DEVICES"):
+            devices = int(os.environ["REPRO_SERVE_DEVICES"])
+        self.plan_spec = plan
+        self.devices = devices
+        self.dedup_cache_size = int(dedup_cache_size)
+        self._plan = None           # built lazily, shared by all engines
         self._engines: Dict[Tuple, SamplingEngine] = {}
         #: per-key metadata for checkpoint refresh: the directory a key's
         #: engine loaded from, the step it resolved, and whether the
@@ -108,8 +127,13 @@ class Scheduler:
                     f"no complete checkpoint found in {req.checkpoint!r}")
             policy_params = mgr.restore_subtree(step, policy_params)
             loaded_step = int(step)
+        if self.plan_spec is not None and self._plan is None:
+            from ..algo.plan import make_plan
+            self._plan = make_plan(self.plan_spec, devices=self.devices)
         engine = SamplingEngine(env, env_params, policy, policy_params,
                                 num_lanes=self.num_lanes,
+                                plan=self._plan,
+                                dedup_cache_size=self.dedup_cache_size,
                                 fault_plan=self.fault_plan,
                                 max_step_retries=self.max_step_retries,
                                 retry_backoff_s=self.retry_backoff_s)
@@ -192,7 +216,8 @@ class Scheduler:
         if only is None:
             with self._lock:
                 engines = dict(self._engines)
-            keys = {k for k, e in engines.items() if e.has_work}
+            keys = {k for k, e in engines.items()
+                    if e.has_work or e.has_results}
         else:
             keys = {self._routes[rid][0] for rid in only
                     if rid in self._routes}
@@ -202,7 +227,10 @@ class Scheduler:
         per_engine: Dict[Tuple, Dict[int, Any]] = {}
         for key in keys:
             engine = engines.get(key)
-            if engine is not None and engine.has_work:
+            if engine is not None and (engine.has_work
+                                       or engine.has_results):
+                # dedup LRU hits complete at submit time with no lane work,
+                # so an engine can hold results while has_work is False
                 per_engine[key] = engine.run()
         out: Dict[int, SampleResult] = {}
         done = []
