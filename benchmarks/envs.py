@@ -13,6 +13,15 @@ evals/s) for the direct vs cached reward on the proxy-model TFBind8 env:
   envs/tfbind8_reward_direct
   envs/tfbind8_reward_cached
 
+plus continuous-rollout throughput rows on the Box env (64 envs, flow
+policy; rollouts/s):
+
+  envs/box_rollout_compiled     one-lax.scan forward_rollout (the shipped
+                                path; continuous density sampling in-scan)
+  envs/box_rollout_python_loop  naive per-step python loop (jitted pieces,
+                                host round-trip per step) — the baseline a
+                                non-compiled sampler would pay
+
 Wrappers delegate at trace time, so the identity stack compiles to the same
 program as the bare env; CI asserts its overhead stays ≤5% (the ISSUE 5
 acceptance bar) from the perf.json written here.  The rollout variants are
@@ -119,6 +128,60 @@ def _bench_reward(tag, env, n_iter, batch=512, **derived):
     return row(f"envs/{tag}", its, batch=batch, **derived)
 
 
+def _bench_box(n_iter, num_envs=64):
+    """Compiled continuous rollout vs a naive python-loop stepper."""
+    from repro.core.types import derive_env_keys
+    from repro.nn.flows import make_box_flow_policy
+
+    env = make_env("box")
+    env_params = env.init(KEY)
+    policy = make_box_flow_policy(env)
+    pp = policy.init(jax.random.PRNGKey(1))
+
+    @jax.jit
+    def compiled(key):
+        key, sub = jax.random.split(key)
+        batch = forward_rollout(sub, env, env_params, policy, pp, num_envs)
+        return key, batch.log_reward
+
+    # naive baseline: same math, but the scan is a host-side loop — one
+    # jitted (sample + step) program per timestep, log-reward on the host
+    @jax.jit
+    def one_step(state, env_keys_t):
+        obs = env.observe(state, env_params)
+        fmask = env.forward_mask(state, env_params)
+        was_done = env.is_terminal(state, env_params)
+        safe_mask = jnp.where(was_done[:, None], jnp.ones_like(fmask), fmask)
+        actions, _ = policy.sample(pp, obs, safe_mask, env_keys_t)
+        _, nstate, log_r, _, _ = env.step(state, actions, env_params)
+        return nstate, log_r
+
+    def python_loop(key):
+        key, sub = jax.random.split(key)
+        _, state = env.reset(num_envs, env_params)
+        env_keys = derive_env_keys(
+            jax.random.split(sub, env.max_steps), jnp.arange(num_envs))
+        total = np.zeros((num_envs,), np.float32)
+        for t in range(env.max_steps):
+            state, log_r = one_step(state, env_keys[t])
+            total += np.asarray(log_r)   # host sync every step, like a
+        return key, total                # non-compiled sampler would pay
+
+    its_c, _ = time_iterations(compiled, KEY, n_iter)
+    key = KEY
+    for _ in range(2):                   # warmup: compile one_step
+        key, out = python_loop(key)
+    t0 = time.perf_counter()
+    for _ in range(max(n_iter // 4, 3)):
+        key, out = python_loop(key)
+    its_p = max(n_iter // 4, 3) / (time.perf_counter() - t0)
+    return [
+        row("envs/box_rollout_compiled", its_c, num_envs=num_envs,
+            speedup_vs_python_loop=f"{its_c / its_p:.2f}"),
+        row("envs/box_rollout_python_loop", its_p, num_envs=num_envs),
+    ]
+
+
 def run(quick: bool = True):
     n = 40 if quick else 150
     hg = lambda: make_env("hypergrid", dim=4, side=8)
@@ -148,4 +211,5 @@ def run(quick: bool = True):
     rows.append(_bench_reward("tfbind8_reward_cached",
                               apply_transforms(tf(), ["reward_cache"]), n,
                               transform="reward_cache"))
+    rows.extend(_bench_box(n))
     return rows

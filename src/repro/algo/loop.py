@@ -104,7 +104,9 @@ def make_sampler_train_step(env, env_params, policy, cfg: GFNConfig,
     plan = make_plan(plan, num_envs=cfg.num_envs)
     shard = plan.shard_info()
     tx = make_optimizer(cfg)
-    parts_fn = make_loss_parts_fn(env, policy.apply, cfg)
+    # the full Policy goes in (not just .apply): evaluate_trajectory needs
+    # the density heads of continuous policies and unwraps .apply otherwise
+    parts_fn = make_loss_parts_fn(env, policy, cfg)
     # samplers get the full Policy (not just .apply): the rollouts they
     # build engage the KV-cache fast path when the policy + env support it
     sig = inspect.signature(sampler.build).parameters

@@ -9,6 +9,15 @@ on-policy training, replay-buffer training, and backward-sampled trajectories.
   SubTB  Eq. (5)   lambda^(k-j)-weighted all-subtrajectory balance
   FLDB   Eq. (7)   forward-looking DB with energy shaping, E(s0)=0
   MDB    Deleu'22  modified DB for all-states-terminal DAG environments
+
+The estimators are agnostic to *where* ``log P_F`` / ``log P_B`` come from:
+for discrete envs they are masked-categorical log-probabilities, for
+continuous envs (``env.continuous_actions``) they are transition
+log-*densities* w.r.t. the env's reference measures (Lahlou et al., "A
+Theory of Continuous Generative Flow Networks" — TB/DB carry over verbatim
+under that substitution).  :func:`evaluate_trajectory` resolves the right
+path; everything downstream of :class:`TrajEval` is shared and never
+touches an action vocabulary.
 """
 from __future__ import annotations
 
@@ -24,8 +33,9 @@ from .types import masked_logprobs
 class TrajEval(NamedTuple):
     """Differentiable per-trajectory quantities under current params.
 
-    log_pf      (T, B)   log P_F(a_t | s_t)
-    log_pb      (T, B)   log P_B(s_t | s_{t+1})
+    log_pf      (T, B)   log P_F(a_t | s_t): categorical log-prob or
+                         transition log-density (continuous envs)
+    log_pb      (T, B)   log P_B(s_t | s_{t+1}), same convention
     log_flow    (T+1, B) flow head at s_t (zeros if policy lacks one)
     log_pf_stop (T+1, B) log P_F(stop | s_t) (zeros if env lacks stop)
     """
@@ -35,9 +45,46 @@ class TrajEval(NamedTuple):
     log_pf_stop: jax.Array
 
 
+def _evaluate_trajectory_continuous(policy, params,
+                                    batch: RolloutBatch) -> TrajEval:
+    """Density path: teacher-force the policy's ``log_prob``/``log_prob_b``
+    heads on the stored float actions.  Observations carry everything the
+    heads need to recompute supports, so replayed and backward-sampled
+    batches evaluate identically to on-policy ones."""
+    Tp1, B = batch.obs.shape[:2]
+    T = Tp1 - 1
+
+    def flat(x):
+        return x.reshape((x.shape[0] * B,) + x.shape[2:])
+
+    log_pf = policy.log_prob(params, flat(batch.obs[:-1]),
+                             flat(batch.actions)).reshape(T, B)
+    log_pb = policy.log_prob_b(params, flat(batch.obs[1:]),
+                               flat(batch.bwd_actions)).reshape(T, B)
+    if policy.log_state_flow is not None:
+        log_flow = policy.log_state_flow(params,
+                                         flat(batch.obs)).reshape(Tp1, B)
+    else:
+        log_flow = jnp.zeros((Tp1, B), jnp.float32)
+    v = batch.valid
+    return TrajEval(log_pf=jnp.where(v, log_pf, 0.0),
+                    log_pb=jnp.where(v, log_pb, 0.0),
+                    log_flow=log_flow,
+                    log_pf_stop=jnp.zeros((Tp1, B), jnp.float32))
+
+
 def evaluate_trajectory(policy_apply: PolicyApply, params,
                         batch: RolloutBatch,
                         stop_action: Optional[int] = None) -> TrajEval:
+    """Accepts a bare ``apply(params, obs)`` callable (categorical path) or
+    a full :class:`repro.core.policies.Policy` — a policy with density
+    entry points (``log_prob`` non-None, see ``nn.flows``) is evaluated
+    through :func:`_evaluate_trajectory_continuous` instead of the masked
+    log-softmax + gather below."""
+    if getattr(policy_apply, "log_prob", None) is not None:
+        return _evaluate_trajectory_continuous(policy_apply, params, batch)
+    if hasattr(policy_apply, "apply"):
+        policy_apply = policy_apply.apply
     Tp1, B = batch.obs.shape[:2]
     flat_obs = batch.obs.reshape((Tp1 * B,) + batch.obs.shape[2:])
     out = policy_apply(params, flat_obs)
@@ -323,6 +370,12 @@ def mdb_loss(ev: TrajEval, batch: RolloutBatch) -> jax.Array:
 # specific extras (log_z, subtb_lambda) are pulled from params/cfg inside the
 # adapter, so trainers dispatch by name with zero per-objective branching and
 # new objectives are one registry entry.
+#
+# Nothing below this line depends on a finite action vocabulary: the
+# adapters consume only TrajEval's (T, B) log-prob/log-density grids and the
+# batch's scalar fields, so the same TB/DB/SubTB estimators train discrete
+# masked-categorical policies and continuous density policies unchanged
+# (asserted in tests/test_box.py::TestVocabularyIndependence).
 #
 # OBJECTIVE_PARTS holds the *unreduced* form: (sum, weight) with
 # loss == sum / max(weight, 1).  Both components are additive over batch

@@ -48,6 +48,17 @@ class Policy(NamedTuple):
     trajectories); on TPU with ``REPRO_PALLAS_COMPILE=1`` and statically-
     zero ``eps`` it lowers the whole step through the fused Pallas kernel
     (``kernels.ops.decode_step``).
+
+    Continuous-action policies (``nn.flows``, for envs with
+    ``continuous_actions = True``) leave the categorical surface unused and
+    instead provide density entry points — samplers draw real-valued actions
+    and objectives teacher-force transition *densities* through them:
+
+      sample(params, obs, mask, env_keys, eps=0.0) -> (action, log_pf)
+      log_prob(params, obs, action)                -> (B,) fwd log-density
+      sample_b(params, obs, mask, env_keys)        -> (bwd_action, log_pb)
+      log_prob_b(params, obs_next, bwd_action)     -> (B,) bwd log-density
+      log_state_flow(params, obs)                  -> (B,) flow head (DB)
     """
     init: Callable
     apply: Callable
@@ -56,6 +67,11 @@ class Policy(NamedTuple):
     cache_fill: Optional[Callable] = None
     query_cached: Optional[Callable] = None
     sample_cached: Optional[Callable] = None
+    sample: Optional[Callable] = None
+    log_prob: Optional[Callable] = None
+    sample_b: Optional[Callable] = None
+    log_prob_b: Optional[Callable] = None
+    log_state_flow: Optional[Callable] = None
 
 
 def make_mlp_policy(obs_dim: int, action_dim: int,

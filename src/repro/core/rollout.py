@@ -180,6 +180,12 @@ def forward_rollout(key: jax.Array, env: Environment, env_params,
     """
     policy, apply_fn = _policy_entry(policy_apply)
     cached = _cache_engaged(env, policy, use_cache)
+    continuous = getattr(env, "continuous_actions", False)
+    if continuous and (policy is None or policy.sample is None):
+        raise ValueError(
+            f"{type(env).__name__} has continuous actions; pass a Policy "
+            "with density entry points (sample/log_prob, see nn.flows), "
+            "not a bare apply callable")
     T = num_steps if num_steps is not None else env.max_steps
     env_ids = env_offset + jnp.arange(num_envs)
     obs0, state0 = env.reset(num_envs, env_params)
@@ -194,7 +200,14 @@ def forward_rollout(key: jax.Array, env: Environment, env_params,
         # terminal no-op environments keep a legal dummy action (argmax mask)
         safe_mask = jnp.where(was_done[:, None],
                               jnp.ones_like(fmask), fmask)
-        if cached and policy.sample_cached is not None:
+        if continuous:
+            # continuous branch: the policy samples real-valued actions from
+            # its density heads — same per-env keys, same mask expansion,
+            # same carry structure as the categorical path
+            actions, log_pf = policy.sample(policy_params, obs, safe_mask,
+                                            env_keys_t,
+                                            eps=exploration_eps)
+        elif cached and policy.sample_cached is not None:
             # fused step: append + query + masked sampling in one op
             token, pos, length = env.observe_last(state, env_params,
                                                   prev_action)
@@ -228,7 +241,8 @@ def forward_rollout(key: jax.Array, env: Environment, env_params,
         cache0 = init_cache
     else:
         cache0 = policy.cache_init(policy_params, num_envs) if cached else ()
-    prev0 = jnp.zeros((num_envs,), jnp.int32)
+    prev0 = jnp.zeros((num_envs, env.action_size), jnp.float32) \
+        if continuous else jnp.zeros((num_envs,), jnp.int32)
     # the whole (T, B) fold_in grid is derived in one vectorized op before
     # the scan — same key stream as folding per step (derive_env_keys)
     env_keys = derive_env_keys(jax.random.split(key, T), env_ids)
@@ -306,6 +320,18 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
     """
     T = num_steps if num_steps is not None else env.max_steps
     policy, apply_fn = _policy_entry(policy_apply)
+    continuous = getattr(env, "continuous_actions", False)
+    if continuous:
+        if policy is None or policy.sample_b is None:
+            raise ValueError(
+                f"{type(env).__name__} has continuous actions; pass a "
+                "Policy with density entry points (sample_b/log_prob, see "
+                "nn.flows), not a bare apply callable")
+        if backward_policy == "uniform":
+            raise ValueError(
+                "backward_policy='uniform' is undefined over continuous "
+                "increments; the flow policy's backward density head is "
+                "the only P_B here")
     needs_policy = with_log_pf or backward_policy != "uniform"
     cached = (_cache_engaged(env, policy, use_cache) and needs_policy
               and getattr(env, "incremental_pop_only", False)
@@ -334,28 +360,34 @@ def backward_rollout(key: jax.Array, env: Environment, env_params,
         at_init = env.is_initial(state, env_params)
         obs = env.observe(state, env_params)
         bmask = env.backward_mask(state, env_params)
-        if backward_policy == "uniform":
-            logits_b = jnp.zeros_like(bmask, jnp.float32)
-        else:
-            out = policy_out(state)
-            logits_b = out.get("logits_b")
-            if logits_b is None:
-                logits_b = jnp.zeros_like(bmask, jnp.float32)
         safe_bmask = jnp.where(at_init[:, None], jnp.ones_like(bmask), bmask)
-        bwd_a, log_pb = sample_masked_per_env(None, logits_b, safe_bmask,
-                                              env_keys=env_keys_t)
+        if continuous:
+            bwd_a, log_pb = policy.sample_b(policy_params, obs, safe_bmask,
+                                            env_keys_t)
+        else:
+            if backward_policy == "uniform":
+                logits_b = jnp.zeros_like(bmask, jnp.float32)
+            else:
+                out = policy_out(state)
+                logits_b = out.get("logits_b")
+                if logits_b is None:
+                    logits_b = jnp.zeros_like(bmask, jnp.float32)
+            bwd_a, log_pb = sample_masked_per_env(None, logits_b, safe_bmask,
+                                                  env_keys=env_keys_t)
         _, prev_state, _, _, _ = env.backward_step(state, bwd_a, env_params)
         fwd_a = env.get_forward_action(state, bwd_a, prev_state, env_params)
         prev_obs = env.observe(prev_state, env_params)
         fmask_prev = env.forward_mask(prev_state, env_params)
         live = jnp.logical_not(at_init)
-        if with_log_pf:
+        if not with_log_pf:
+            log_pf = jnp.zeros(fwd_a.shape[:1], jnp.float32)
+        elif continuous:
+            log_pf = policy.log_prob(policy_params, prev_obs, fwd_a)
+        else:
             prev_out = policy_out(prev_state)
             logp_f_all = masked_logprobs(prev_out["logits"], fmask_prev)
             log_pf = jnp.take_along_axis(logp_f_all, fwd_a[:, None],
                                          axis=-1)[:, 0]
-        else:
-            log_pf = jnp.zeros(fwd_a.shape, jnp.float32)
         acc_pf = acc_pf + jnp.where(live, log_pf, 0.0)
         acc_pb = acc_pb + jnp.where(live, log_pb, 0.0)
         ys = dict(obs=obs, bwd_a=bwd_a, fwd_a=fwd_a, live=live)

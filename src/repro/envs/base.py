@@ -50,6 +50,26 @@ A new scenario is four pieces, each replaceable independently:
    factory, default recipe) and the env becomes launchable as
    ``python -m repro.run --env <name> --transform beta=2.0`` with any
    transform stack and objective.
+
+Continuous-action environments
+------------------------------
+An env whose actions are points rather than vocabulary indices (see
+:mod:`repro.envs.box`) sets the class attribute ``continuous_actions =
+True`` and stores actions as float vectors of length ``action_size``.  The
+contract above still holds — masks stay boolean per *arm* (e.g.
+``[can_increment, can_exit]``), ``step``/``_backward`` consume the float
+action, and the reward seam is unchanged — but sampling and likelihoods
+move into the policy: rollouts call the policy's density entry points
+(``sample`` / ``log_prob`` / ``sample_b`` / ``log_prob_b``,
+:mod:`repro.nn.flows`) instead of ``sample_masked_per_env``, and the
+objectives consume transition log-*densities* w.r.t. the env's reference
+measures (deterministic transitions are Dirac: log 0).  The env should
+expose its support geometry (``forward_support`` / ``backward_support`` in
+box) so policies can recompute legal intervals from observations alone,
+which keeps teacher-forced replay evaluation exact.  Enumeration surfaces
+don't apply (a continuum has no flat terminal index), so registry entries
+exclude ``reward_cache`` from ``transforms`` and grade convergence with the
+quadrature evaluator (:mod:`repro.evals.quadrature`) instead of exact DP.
 """
 from __future__ import annotations
 

@@ -1,0 +1,195 @@
+"""Box: the 2-D continuous-state environment (torchgfn's reference env for
+"A Theory of Continuous Generative Flow Networks", Lahlou et al.).
+
+State is a point ``s`` in the unit square plus a step counter.  A forward
+action either
+
+- **increments** both coordinates by ``u`` with per-coordinate support
+  ``u_i in [delta_min, min(delta_max, 1 - s_i)]`` (the δ-min constraint keeps
+  every trajectory finite; the upper cap keeps the state inside the box), or
+- **exits**: a distinguished action that freezes the current point as the
+  terminal object (the continuous analogue of hypergrid's stop — the state
+  flips to a terminal *copy* and further steps are no-ops).
+
+Exit is illegal at ``s0 = (0, 0)`` and *forced* once any coordinate is
+within ``delta_min`` of the boundary, so trajectories are variable-length
+with at most ``floor((1 - delta_min)/delta_min) + 1`` increments.
+
+Because the step counter is part of the state (and of the observation), the
+DAG is graded: a state at step ``t`` has parents only at step ``t - 1``, and
+the backward increment support is the reachability-constrained interval
+returned by :meth:`BoxEnvironment.backward_support`.  Two backward
+transitions are deterministic (density 1 w.r.t. a Dirac reference measure,
+log-contribution 0): un-exiting a terminal copy, and the step from a
+one-increment state back to ``s0``.
+
+Actions are stored as float vectors ``(B, 3) = [u_x, u_y, exit_flag]``
+(``exit_flag > 0.5`` means exit / un-exit); masks stay boolean ``(B, 2) =
+[can_increment, can_exit]`` so the rollout's terminal-row mask expansion
+works unchanged.  Densities live in :mod:`repro.nn.flows`; this module only
+owns geometry and dynamics.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import pytree_dataclass
+from .base import Environment, EnvSpec, RewardModule
+
+#: slack on boundary comparisons: positions are sums of float32 increments
+_BOUNDARY_TOL = 1e-6
+
+
+@pytree_dataclass
+class BoxState:
+    pos: jax.Array       # (B, 2) float32 in [0, 1]^2
+    terminal: jax.Array  # (B,)   bool — exit taken (terminal copy)
+    steps: jax.Array     # (B,)   int32 — forward steps taken (incl. exit)
+
+
+class BoxEnvironment(Environment):
+    """Vectorized 2-D Box with increment + exit actions (module docstring)."""
+
+    #: continuous-action marker: rollouts sample through the policy's
+    #: density heads instead of ``sample_masked_per_env``
+    continuous_actions = True
+    #: mask arms: [increment, exit] forward / [step-back, un-exit] backward
+    action_dim = 2
+    backward_action_dim = 2
+    #: stored action vector length: [u_x, u_y, exit_flag]
+    action_size = 3
+
+    def __init__(self, reward_module: Optional[RewardModule] = None,
+                 delta_min: float = 0.1, delta_max: float = 0.25):
+        if not (0.0 < delta_min < delta_max <= 1.0):
+            raise ValueError(
+                f"need 0 < delta_min < delta_max <= 1, got "
+                f"({delta_min}, {delta_max})")
+        if reward_module is None:
+            from ..rewards.box import BoxRewardModule
+            reward_module = BoxRewardModule()
+        self.reward_module = reward_module
+        self.delta_min = float(delta_min)
+        self.delta_max = float(delta_max)
+        # worst case: coordinates grow by exactly delta_min per increment and
+        # an increment is legal while s_i <= 1 - delta_min
+        self.max_increments = int(
+            math.floor((1.0 - delta_min) / delta_min + 1e-9)) + 1
+        self.max_steps = self.max_increments + 1  # increments + exit
+
+    # -- setup --------------------------------------------------------------
+    def env_spec(self) -> EnvSpec:
+        return EnvSpec(kind="box", dim=2)
+
+    def init(self, key: jax.Array):
+        return self.reward_module.init(key, self.env_spec())
+
+    def reset(self, num_envs: int, params) -> Tuple[jax.Array, BoxState]:
+        state = BoxState(
+            pos=jnp.zeros((num_envs, 2), jnp.float32),
+            terminal=jnp.zeros((num_envs,), bool),
+            steps=jnp.zeros((num_envs,), jnp.int32))
+        return self.observe(state, params), state
+
+    # -- geometry helpers (shared with nn.flows and the tests) --------------
+    def forward_support(self, pos: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+        """Per-coordinate forward increment interval ``[lo, hi]`` at ``pos``
+        (both (B, 2)); empty (hi < lo) exactly when the increment arm of
+        :meth:`forward_mask` is off."""
+        lo = jnp.full_like(pos, self.delta_min)
+        hi = jnp.minimum(jnp.float32(self.delta_max), 1.0 - pos)
+        return lo, hi
+
+    def backward_support(self, pos: jax.Array, steps: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array]:
+        """Per-coordinate backward increment interval at a content state
+        reached by ``steps`` increments: ``u`` must itself be a legal
+        increment and ``pos - u`` must be reachable in ``steps - 1``
+        increments and allow a further increment.  Degenerates to the point
+        ``{pos}`` at ``steps == 1`` (the Dirac back to ``s0``)."""
+        t1 = jnp.maximum(steps.astype(jnp.float32) - 1.0, 0.0)[:, None]
+        lo = jnp.maximum(
+            jnp.maximum(jnp.float32(self.delta_min),
+                        pos - t1 * self.delta_max),
+            pos - (1.0 - self.delta_min))
+        hi = jnp.minimum(jnp.float32(self.delta_max),
+                         pos - t1 * self.delta_min)
+        return lo, hi
+
+    def obs_fields(self, obs: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Decode an observation back into ``(pos, steps, terminal)`` — the
+        geometry is static, so densities can be teacher-forced from stored
+        observations alone."""
+        pos = obs[..., :2]
+        steps = jnp.round(obs[..., 2] * self.max_steps).astype(jnp.int32)
+        terminal = obs[..., 3] > 0.5
+        return pos, steps, terminal
+
+    # -- dynamics -----------------------------------------------------------
+    def _forward(self, state: BoxState, action: jax.Array,
+                 params) -> BoxState:
+        is_exit = action[:, 2] > 0.5
+        delta = jnp.where(is_exit[:, None], 0.0, action[:, :2])
+        pos = jnp.clip(state.pos + delta, 0.0, 1.0)
+        return BoxState(pos=pos,
+                        terminal=jnp.logical_or(state.terminal, is_exit),
+                        steps=state.steps + 1)
+
+    def _backward(self, state: BoxState, action: jax.Array,
+                  params) -> BoxState:
+        is_unexit = action[:, 2] > 0.5
+        delta = jnp.where(is_unexit[:, None], 0.0, action[:, :2])
+        pos = jnp.clip(state.pos - delta, 0.0, 1.0)
+        return BoxState(
+            pos=pos,
+            terminal=jnp.logical_and(state.terminal,
+                                     jnp.logical_not(is_unexit)),
+            steps=jnp.maximum(state.steps - 1, 0))
+
+    def is_terminal(self, state: BoxState, params) -> jax.Array:
+        return state.terminal
+
+    # -- observations / masks ----------------------------------------------
+    def observe(self, state: BoxState, params) -> jax.Array:
+        # (B, 4): [x, y, steps / max_steps, terminal] — everything densities
+        # need to recompute supports (obs_fields inverts the encoding)
+        return jnp.concatenate(
+            [state.pos,
+             (state.steps.astype(jnp.float32) / self.max_steps)[:, None],
+             state.terminal.astype(jnp.float32)[:, None]], axis=1)
+
+    def forward_mask(self, state: BoxState, params) -> jax.Array:
+        live = jnp.logical_not(state.terminal)
+        room = jnp.all(state.pos <= 1.0 - self.delta_min + _BOUNDARY_TOL,
+                       axis=1)
+        can_inc = jnp.logical_and(room, live)
+        can_exit = jnp.logical_and(state.steps >= 1, live)
+        return jnp.stack([can_inc, can_exit], axis=1)
+
+    def backward_mask(self, state: BoxState, params) -> jax.Array:
+        live = jnp.logical_not(state.terminal)
+        can_back = jnp.logical_and(live, state.steps >= 1)
+        return jnp.stack([can_back, state.terminal], axis=1)
+
+    # -- action correspondences --------------------------------------------
+    # the float action vector IS its own structural reverse: the backward
+    # transition removes the same increment / undoes the same exit, and the
+    # Dirac special cases are recovered from the *observation* at density
+    # time (nn.flows), not from the action encoding
+    def get_backward_action(self, state: BoxState, action: jax.Array,
+                            next_state: BoxState, params) -> jax.Array:
+        return action
+
+    def get_forward_action(self, state: BoxState, bwd_action: jax.Array,
+                           prev_state: BoxState, params) -> jax.Array:
+        return bwd_action
+
+    # -- reward seam --------------------------------------------------------
+    def terminal_repr(self, state: BoxState, params) -> Any:
+        return state.pos

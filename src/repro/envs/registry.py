@@ -41,6 +41,9 @@ class EnvEntry:
                        re-observation per step), or "none" (no standalone
                        policy to serve, e.g. a recipe whose custom driver
                        owns the reward params)
+    action_space       "discrete" (masked-categorical policies) or
+                       "continuous" (density policies, ``nn.flows``); shown
+                       as the ``actions`` column of ``--list-envs``
     """
     name: str
     description: str
@@ -49,6 +52,7 @@ class EnvEntry:
     smoke_overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
     transforms: Tuple[str, ...] = ("identity", "reward_exponent")
     serving: str = "full-obs"
+    action_space: str = "discrete"
 
 
 def register_env(entry: EnvEntry) -> EnvEntry:
@@ -126,6 +130,13 @@ def _ising(n: int = 9, sigma: float = -0.1):
     return IsingEnvironment(n=n, sigma=sigma)
 
 
+def _box(delta_min: float = 0.1, delta_max: float = 0.25):
+    from ..rewards.box import BoxRewardModule
+    from .box import BoxEnvironment
+    return BoxEnvironment(BoxRewardModule(), delta_min=delta_min,
+                          delta_max=delta_max)
+
+
 register_env(EnvEntry(
     name="hypergrid",
     description="d-dim hypergrid with the Bengio et al. 2021 mode reward "
@@ -194,3 +205,14 @@ register_env(EnvEntry(
     # param-free wrappers compose with it
     transforms=("identity",),
     serving="none"))
+
+register_env(EnvEntry(
+    name="box",
+    description="continuous 2-D Box in [0,1]^2: bounded increments + exit, "
+                "mixture-of-Gaussians reward (Lahlou et al. / torchgfn)",
+    make=_box, recipe="box_tb",
+    # reward_cache / the DP evaluators need enumerable terminals — a
+    # continuum has none, so only reward-rescaling wrappers compose
+    transforms=("identity", "reward_exponent"),
+    serving="none",
+    action_space="continuous"))

@@ -8,11 +8,14 @@ Three evaluator families plug into :class:`EvalSuite`, which
   the learned P_F (enumerable envs: hypergrid, small bitseq);
 - :class:`SampledDistributionEval` / :class:`RewardCorrelationEval` —
   empirical TV/JSD, mode coverage, Spearman/Pearson reward correlation;
+- :class:`QuadratureDistributionEval` — TV/JSD of sampled terminals against
+  the quadrature-binned normalized reward (continuous envs);
 - :class:`LogZBoundsEval` — ELBO/EUBO sandwich + MC log-Z estimate (§B.2).
 """
 from .bounds import LogZBoundsEval
 from .exact import (ExactDistributionEval, make_bitseq_dp, make_exact_dp,
                     make_hypergrid_dp)
+from .quadrature import QuadratureDistributionEval
 from .sampling import (RewardCorrelationEval, SampledDistributionEval,
                        uniform_probe_states)
 from .suite import EvalSuite, Evaluator, MetricsState
@@ -23,5 +26,6 @@ __all__ = [
     "make_bitseq_dp",
     "SampledDistributionEval", "RewardCorrelationEval",
     "uniform_probe_states",
+    "QuadratureDistributionEval",
     "LogZBoundsEval",
 ]

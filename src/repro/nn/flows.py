@@ -1,0 +1,260 @@
+"""Continuous policy heads: squashed-Gaussian-mixture densities over bounded
+increments plus an exit-probability head (the flow-based P_F/P_B pair for
+continuous-state GFlowNets, Lahlou et al.).
+
+Where a discrete policy emits masked-categorical logits, a continuous one
+emits *distribution parameters*: a conditioner MLP maps the observation to,
+per coordinate, the (logits, means, log-scales) of a K-component Gaussian
+mixture that is squashed onto the legal increment interval ``[lo, hi]`` by
+
+    x = lo + (hi - lo) * sigmoid(z),      z ~ sum_k pi_k N(mu_k, sigma_k^2)
+
+The change of variables gives an exact log-density that integrates to 1 on
+``[lo, hi]`` by construction (``tests/test_box.py`` checks this by
+quadrature), so trajectory-level objectives consume these log-densities
+exactly where they consumed categorical log-probs — TB/DB carry over
+verbatim (see ``core/objectives.py``).
+
+A Bernoulli exit head decides increment-vs-exit; it is *forced* where the
+environment forces it (exit illegal at ``s0``, mandatory within δ-min of
+the boundary), mirroring how action masks pin categorical policies.  The
+two deterministic backward transitions (un-exit, the step back to ``s0``)
+are Dirac w.r.t. their reference measure and contribute log-probability 0.
+
+:func:`make_box_flow_policy` packages all of this as a
+:class:`repro.core.policies.Policy` whose continuous entry points are
+
+    sample(params, obs, mask, env_keys, eps)   -> (action, log_pf)
+    log_prob(params, obs, action)              -> (B,) forward log-density
+    sample_b(params, obs, mask, env_keys)      -> (bwd_action, log_pb)
+    log_prob_b(params, obs_next, bwd_action)   -> (B,) backward log-density
+    log_state_flow(params, obs)                -> (B,) state-flow head (DB)
+
+Sampling is keyed per global env id exactly like ``sample_masked_per_env``
+(each row consumes its own ``fold_in``-derived key), so ``single`` /
+``vmap_seeds`` / ``data_parallel`` execution plans produce bitwise-identical
+trajectories (``tests/test_box.py::TestPlanParity``).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..envs.base import ILLEGAL_LOGPROB
+from .core import mlp_apply, mlp_init
+
+_LOG_2PI = 1.8378770664093453
+#: numerical floors: interval widths can collapse to measure-zero points at
+#: the support boundary (reachability-constrained backward intervals
+#: degenerate at staircase corners); sigmoid inverses need to stay away
+#: from {0, 1}.  The width floor deliberately caps how Dirac-like a
+#: near-degenerate interval's density can get — unbounded log-densities
+#: make the squared TB/DB residuals explode on the trajectories that graze
+#: those corners.
+_MIN_WIDTH = 1e-3
+_EPS = 1e-6
+#: head-parameter clips, same spirit: bound the achievable log-density so
+#: the policy cannot chase (or be punished by) edge-of-support density
+#: spikes of the sigmoid squash.  means in z-space span sigmoid(+-3) ~
+#: [0.05, 0.95] of the interval; scales keep the z-space mixture from
+#: collapsing below ~0.14.
+_MEAN_CLIP = 3.0
+_LOG_SCALE_RANGE = (-2.0, 1.0)
+
+
+def _scales(log_scales: jax.Array) -> jax.Array:
+    return jnp.exp(jnp.clip(log_scales, *_LOG_SCALE_RANGE))
+
+
+def _means(means: jax.Array) -> jax.Array:
+    return jnp.clip(means, -_MEAN_CLIP, _MEAN_CLIP)
+
+
+def squashed_mixture_log_prob(logits: jax.Array, means: jax.Array,
+                              log_scales: jax.Array, x: jax.Array,
+                              lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Exact log-density at ``x`` of the squashed Gaussian mixture on
+    ``[lo, hi]``.  Mixture params are (..., K); ``x``/``lo``/``hi`` are
+    (...,); returns (...,).  Integrates to 1 over ``[lo, hi]``."""
+    width = jnp.maximum(hi - lo, _MIN_WIDTH)
+    u = jnp.clip((x - lo) / width, _EPS, 1.0 - _EPS)
+    z = jnp.log(u) - jnp.log1p(-u)
+    sig = _scales(log_scales)
+    log_mix = jax.nn.log_softmax(logits, axis=-1)
+    comp = (-0.5 * ((z[..., None] - _means(means)) / sig) ** 2
+            - jnp.log(sig) - 0.5 * _LOG_2PI)
+    log_pdf_z = jax.nn.logsumexp(log_mix + comp, axis=-1)
+    # |dx/dz| = width * u * (1 - u)
+    return log_pdf_z - jnp.log(width) - jnp.log(u) - jnp.log1p(-u)
+
+
+def squashed_mixture_sample(key: jax.Array, logits: jax.Array,
+                            means: jax.Array, log_scales: jax.Array,
+                            lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """One draw per leading index: pick a component, sample its Gaussian,
+    squash onto ``[lo, hi]``.  Mixture params (..., K); returns (...,)."""
+    kc, kn = jax.random.split(key)
+    comp = jax.random.categorical(kc, logits, axis=-1)
+    mu = jnp.take_along_axis(_means(means), comp[..., None], axis=-1)[..., 0]
+    sig = _scales(
+        jnp.take_along_axis(log_scales, comp[..., None], axis=-1)[..., 0])
+    z = mu + sig * jax.random.normal(kn, mu.shape)
+    width = jnp.maximum(hi - lo, _MIN_WIDTH)
+    return lo + width * jax.nn.sigmoid(z)
+
+
+def _exit_logprobs(exit_logit, can_inc, can_exit):
+    """(log p_exit, log (1 - p_exit)) honoring the forced branches: exit is
+    certain where incrementing is illegal, impossible where exit is."""
+    forced_exit = jnp.logical_and(jnp.logical_not(can_inc), can_exit)
+    no_exit = jnp.logical_not(can_exit)
+    log_pe = jax.nn.log_sigmoid(exit_logit)
+    log_1me = jax.nn.log_sigmoid(-exit_logit)
+    log_pe = jnp.where(forced_exit, 0.0,
+                       jnp.where(no_exit, ILLEGAL_LOGPROB, log_pe))
+    log_1me = jnp.where(forced_exit, ILLEGAL_LOGPROB,
+                        jnp.where(no_exit, 0.0, log_1me))
+    return log_pe, log_1me
+
+
+def make_box_flow_policy(env, hidden: Sequence[int] = (128, 128),
+                         num_components: int = 4,
+                         init_log_z: float = 0.0):
+    """Flow policy for :class:`repro.envs.box.BoxEnvironment` (and any env
+    with its 2-coordinate increment/exit geometry).
+
+    One MLP torso conditions every head; the forward mixture/exit heads read
+    the current observation, the backward mixture head reads the *next*
+    state's observation, and the scalar flow head serves DB/SubTB.
+    """
+    from ..core.policies import Policy
+
+    D = 2                      # coordinates
+    K = int(num_components)
+    obs_dim = 4                # [x, y, steps_norm, terminal]
+    # fwd (logits, means, log_scales) + exit logit + bwd triple + flow head
+    out_dim = 2 * (D * 3 * K) + 2
+
+    def init(key):
+        return {"torso": mlp_init(key, obs_dim, list(hidden), out_dim),
+                "log_z": jnp.zeros((), jnp.float32) + init_log_z}
+
+    def _heads(params, obs):
+        out = mlp_apply(params["torso"], obs.astype(jnp.float32))
+        n = D * 3 * K
+
+        def mixture(block):   # (..., 3*D*K) -> three (..., D, K) tensors
+            b = block.reshape(block.shape[:-1] + (D, 3 * K))
+            return b[..., :K], b[..., K:2 * K], b[..., 2 * K:]
+
+        fwd = mixture(out[..., :n])
+        bwd = mixture(out[..., n:2 * n])
+        return fwd, bwd, out[..., 2 * n], out[..., 2 * n + 1]
+
+    def apply(params, obs):
+        # dict surface kept for uniformity with discrete policies; a
+        # continuous env has no categorical logits to expose
+        _, _, _, log_flow = _heads(params, obs)
+        return {"log_flow": log_flow}
+
+    def log_state_flow(params, obs):
+        _, _, _, log_flow = _heads(params, obs)
+        return log_flow
+
+    def _fwd_masks(pos, steps, terminal):
+        live = jnp.logical_not(terminal)
+        room = jnp.all(pos <= 1.0 - env.delta_min + 1e-6, axis=-1)
+        return jnp.logical_and(room, live), \
+            jnp.logical_and(steps >= 1, live)
+
+    def log_prob(params, obs, action):
+        """(B,) log-density of forward ``action`` = [u_x, u_y, exit] at
+        ``obs`` — the teacher-forcing entry consumed by the objectives."""
+        pos, steps, terminal = env.obs_fields(obs)
+        can_inc, can_exit = _fwd_masks(pos, steps, terminal)
+        (f_log, f_mu, f_ls), _, exit_logit, _ = _heads(params, obs)
+        log_pe, log_1me = _exit_logprobs(exit_logit, can_inc, can_exit)
+        lo, hi = env.forward_support(pos)
+        dens = squashed_mixture_log_prob(f_log, f_mu, f_ls,
+                                         action[..., :2], lo, hi)
+        inc_lp = log_1me + jnp.sum(dens, axis=-1)
+        return jnp.where(action[..., 2] > 0.5, log_pe, inc_lp)
+
+    def log_prob_b(params, obs_next, bwd_action):
+        """(B,) log-density of the backward ``bwd_action`` taken *at*
+        ``obs_next`` (the state being backed out of).  Un-exit and the step
+        back to ``s0`` are Dirac: log-contribution 0."""
+        pos, steps, terminal = env.obs_fields(obs_next)
+        _, (b_log, b_mu, b_ls), _, _ = _heads(params, obs_next)
+        lo, hi = env.backward_support(pos, steps)
+        dens = jnp.sum(squashed_mixture_log_prob(
+            b_log, b_mu, b_ls, bwd_action[..., :2], lo, hi), axis=-1)
+        dirac = jnp.logical_or(terminal, steps <= 1)
+        return jnp.where(dirac, 0.0, dens)
+
+    def sample(params, obs, mask, env_keys, eps=0.0):
+        """Per-env forward draw: exit-vs-increment Bernoulli, then a
+        squashed-mixture increment.  ``mask`` is the rollout's (B, 2)
+        safe mask ``[can_increment, can_exit]``; ``env_keys`` the (B, 2)
+        per-global-env-id key rows.  With statically-zero ``eps`` the
+        ε-branch compiles away; otherwise ε mixes in uniform draws over the
+        legal support (the returned ``log_pf`` is always the *policy*
+        density of the realized action, same convention as the masked
+        categorical sampler)."""
+        pos, _, _ = env.obs_fields(obs)
+        can_inc, can_exit = mask[:, 0], mask[:, 1]
+        (f_log, f_mu, f_ls), _, exit_logit, _ = _heads(params, obs)
+        lo, hi = env.forward_support(pos)
+
+        ks = jax.vmap(lambda k: jax.random.split(k, 4))(env_keys)
+        k_exit, k_mix, k_eps, k_unif = (ks[:, i] for i in range(4))
+
+        log_pe, _ = _exit_logprobs(exit_logit, can_inc, can_exit)
+        p_exit = jnp.exp(log_pe)
+        exit_draw = jax.vmap(
+            lambda k: jax.random.uniform(k, ()))(k_exit) < p_exit
+        u = jax.vmap(squashed_mixture_sample)(k_mix, f_log, f_mu, f_ls,
+                                              lo, hi)
+        if not (isinstance(eps, (int, float)) and eps == 0.0):
+            width = jnp.maximum(hi - lo, _MIN_WIDTH)
+            u_unif = lo + width * jax.vmap(
+                lambda k: jax.random.uniform(k, (D,)))(k_unif)
+            r = jax.vmap(lambda k: jax.random.uniform(k, (2,)))(k_eps)
+            explore = r[:, 0] < eps
+            # exploratory exit: fair coin where both arms are legal,
+            # the forced arm otherwise
+            exit_unif = jnp.where(can_inc, r[:, 1] < 0.5, True)
+            exit_unif = jnp.logical_and(exit_unif, can_exit)
+            exit_draw = jnp.where(explore, exit_unif, exit_draw)
+            u = jnp.where(explore[:, None], u_unif, u)
+        action = jnp.concatenate(
+            [jnp.where(exit_draw[:, None], 0.0, u),
+             exit_draw[:, None].astype(jnp.float32)], axis=1)
+        return action, log_prob(params, obs, action)
+
+    def sample_b(params, obs, mask, env_keys):
+        """Per-env backward draw at ``obs``: un-exit at terminal copies,
+        Dirac to ``s0`` at one-increment states, a squashed-mixture
+        increment removal otherwise.  ``mask`` is accepted for signature
+        symmetry; the branch structure is recomputed from ``obs``."""
+        del mask
+        pos, steps, terminal = env.obs_fields(obs)
+        _, (b_log, b_mu, b_ls), _, _ = _heads(params, obs)
+        lo, hi = env.backward_support(pos, steps)
+        u = jax.vmap(squashed_mixture_sample)(env_keys, b_log, b_mu, b_ls,
+                                              lo, hi)
+        # one-increment (or initial) content states step straight back to
+        # s0: remove the full position
+        dirac_origin = jnp.logical_and(steps <= 1,
+                                       jnp.logical_not(terminal))
+        u = jnp.where(dirac_origin[:, None], pos, u)
+        action = jnp.concatenate(
+            [jnp.where(terminal[:, None], 0.0, u),
+             terminal[:, None].astype(jnp.float32)], axis=1)
+        return action, log_prob_b(params, obs, action)
+
+    return Policy(init, apply, sample=sample, log_prob=log_prob,
+                  sample_b=sample_b, log_prob_b=log_prob_b,
+                  log_state_flow=log_state_flow)

@@ -6,6 +6,7 @@ Importing this package registers all built-in recipes; list them with
 from .base import RECIPES, Recipe, RunOptions, get, names, register
 
 # importing the catalog modules registers their recipes
-from . import dag, hypergrid, ising, phylo, seqs  # noqa: F401  (side effects)
+from . import (box, dag, hypergrid, ising,  # noqa: F401  (side effects)
+               phylo, seqs)
 
 __all__ = ["Recipe", "RunOptions", "RECIPES", "register", "get", "names"]

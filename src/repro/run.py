@@ -343,9 +343,12 @@ def main(argv=None) -> int:
                      default=0)
         swidth = max((len(get_env(n).serving) for n in env_names()),
                      default=0)
+        awidth = max((len(get_env(n).action_space) for n in env_names()),
+                     default=0)
         for n in env_names():
             e = get_env(n)
             print(f"{n:<{width}}  recipe={e.recipe:<{rwidth}}  "
+                  f"actions={e.action_space:<{awidth}}  "
                   f"serving={e.serving:<{swidth}}  "
                   f"transforms={','.join(e.transforms)}  {e.description}")
         return 0
@@ -358,11 +361,29 @@ def main(argv=None) -> int:
 
     if args.env_name is not None:
         try:
-            get_env(args.env_name)
+            entry = get_env(args.env_name)
         except KeyError:
             print(f"error: unknown env {args.env_name!r}; run --list-envs "
                   "to see the registry", file=sys.stderr)
             return 2
+        # declarative transform support check: fail with one clear line
+        # instead of a construction-time traceback (e.g. reward_cache on a
+        # continuous env, whose terminals cannot be enumerated)
+        from repro.envs.transforms import parse_transform
+        supported = {t.partition(":")[0] for t in entry.transforms}
+        for spec in args.transforms or ():
+            try:
+                tname, _ = parse_transform(spec)
+            except (KeyError, ValueError) as e:
+                print(f"error: bad transform spec {spec!r}: {e}",
+                      file=sys.stderr)
+                return 2
+            if tname not in supported:
+                print(f"error: env {args.env_name!r} does not support "
+                      f"transform {tname!r} (supported: "
+                      f"{', '.join(sorted(supported))}); see the "
+                      "transforms column of --list-envs", file=sys.stderr)
+                return 2
     if args.recipe is not None:
         try:
             recipes.get(args.recipe)

@@ -31,6 +31,26 @@ KEY = jax.random.PRNGKey(0)
 
 
 def uniform_policy(env):
+    if getattr(env, "continuous_actions", False):
+        # continuous envs have no categorical surface; stand in a small
+        # flow policy with params bound by closure so call sites can keep
+        # passing policy_params=None
+        from repro.nn.flows import make_box_flow_policy
+        pol = make_box_flow_policy(env, hidden=(16,), num_components=2)
+        params = pol.init(KEY)
+
+        def bind(f):
+            if f is None:
+                return None
+            return lambda _params, *a, **kw: f(params, *a, **kw)
+
+        return pol._replace(apply=bind(pol.apply),
+                            sample=bind(pol.sample),
+                            log_prob=bind(pol.log_prob),
+                            sample_b=bind(pol.sample_b),
+                            log_prob_b=bind(pol.log_prob_b),
+                            log_state_flow=bind(pol.log_state_flow))
+
     def apply(_params, obs):
         return {"logits": jnp.zeros((obs.shape[0], env.action_dim),
                                     jnp.float32)}
